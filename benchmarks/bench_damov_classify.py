@@ -1,0 +1,57 @@
+"""DAMOV bottleneck classification across all dry-run cells.
+
+Mirrors thesis Fig 4.1 / Fig 4.26 / Table C.7: every (arch x shape x mesh)
+cell classified by its dominant roofline term, plus the two single-metric
+views (roofline position, AI) the thesis shows are insufficient alone.
+
+Reads benchmarks/results/*.json (produced by repro.launch.dryrun).
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+from collections import Counter
+from typing import Dict, List
+
+
+def load_rows(results_dir: str = None) -> List[Dict]:
+    results_dir = results_dir or os.path.join(os.path.dirname(__file__),
+                                              "results")
+    rows = []
+    for path in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(path) as f:
+            rows.append(json.load(f))
+    return rows
+
+
+def run(emit) -> None:
+    rows = [r for r in load_rows() if r.get("status") == "OK"
+            and not r.get("tag")]
+    if not rows:
+        emit("damov_classify/no_results", 0, "run repro.launch.dryrun first")
+        return
+    classes = Counter()
+    for r in rows:
+        d = r["damov"]
+        classes[d["bottleneck_class"]] += 1
+        cell = f"{r['arch']}/{r['shape']}/{r['mesh']}"
+        emit(f"damov_classify/{cell}", d["step_time_s"] * 1e6,
+             f"class={d['bottleneck_class'].split()[0]}"
+             f";rf={d['roofline_fraction']:.3f}"
+             f";AI={d['arithmetic_intensity']:.0f}"
+             f";useful={d['useful_ratio']:.2f}")
+    for clazz, n in sorted(classes.items()):
+        emit(f"damov_classify/count[{clazz.split()[0]}]", 0, f"n={n}")
+    # the thesis' headline: single metrics disagree with the full classification
+    mem_like = [r for r in rows
+                if r["damov"]["arithmetic_intensity"] < 240]  # below ridge
+    mism = sum(1 for r in mem_like
+               if not r["damov"]["bottleneck_class"].startswith(("MEM", "LAT")))
+    emit("damov_classify/ridge_rule_mismatches", 0,
+         f"{mism}/{len(mem_like)} low-AI cells NOT memory-class "
+         "(single-metric insufficiency, thesis Fig 4.1)")
+
+
+if __name__ == "__main__":
+    run(lambda n, t, d: print(f"{n},{t:.2f},{d}"))

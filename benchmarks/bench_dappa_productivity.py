@@ -1,0 +1,111 @@
+"""DaPPA productivity + overhead benchmark (thesis Table 7.1 / Fig 7.4-7.5).
+
+Three PrIM-style workloads implemented twice:
+  (a) DaPPA patterns (map/zip/reduce/window/filter),
+  (b) hand-written jnp/shard_map equivalents.
+Reports lines-of-code and measured wall-time ratio.
+"""
+from __future__ import annotations
+
+import inspect
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import dappa
+
+
+# --- workload definitions ---------------------------------------------------
+def dappa_dot():
+    x, y = dappa.input_stream("x"), dappa.input_stream("y")
+    return dappa.compile_pipeline(
+        x.zip(y).map(lambda t: t[..., 0] * t[..., 1]).reduce("sum"))
+
+
+def hand_dot():
+    def f(x, y):
+        return (x * y).sum()
+    return jax.jit(f)
+
+
+def dappa_select_mean():
+    x = dappa.input_stream("x")
+    return dappa.compile_pipeline(x.filter(lambda v: v > 0).reduce("mean"))
+
+
+def hand_select_mean():
+    def f(x):
+        m = x > 0
+        return jnp.where(m, x, 0).sum() / jnp.maximum(m.sum(), 1)
+    return jax.jit(f)
+
+
+def dappa_moving_max():
+    x = dappa.input_stream("x")
+    return dappa.compile_pipeline(x.window(8, lambda w: w.max(-1)))
+
+
+def hand_moving_max():
+    def f(x):
+        n = x.shape[0]
+        ext = jnp.concatenate([x, jnp.zeros((7,), x.dtype)])
+        wins = jnp.stack([ext[i: i + n] for i in range(8)], axis=-1)
+        out = wins.max(-1)
+        valid = jnp.arange(n) <= n - 8
+        return jnp.where(valid, out, 0)
+    return jax.jit(f)
+
+
+WORKLOADS = [
+    ("dot_product", dappa_dot, hand_dot, ("x", "y")),
+    ("select_mean", dappa_select_mean, hand_select_mean, ("x",)),
+    ("moving_max", dappa_moving_max, hand_moving_max, ("x",)),
+]
+
+
+def _loc(fn) -> int:
+    src = inspect.getsource(fn)
+    return sum(1 for line in src.splitlines()
+               if line.strip() and not line.strip().startswith(("#", "def",
+                                                                '"""')))
+
+
+def _time(fn, kwargs, n=20):
+    out = fn(**kwargs)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(**kwargs)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / n * 1e6
+
+
+def run(emit) -> None:
+    xs = jnp.linspace(-4, 4, 1 << 16)
+    ys = jnp.linspace(1, 2, 1 << 16)
+    env = {"x": xs, "y": ys}
+    for name, mk_d, mk_h, args in WORKLOADS:
+        fd, fh = mk_d(), mk_h()
+        kw = {k: env[k] for k in args}
+        td = _time(lambda **k: fd(**k), kw)
+        th = _time(lambda **k: fh(*[k[a] for a in args]) if False else
+                   fh(*(k[a] for a in args)), kw)
+        # correctness cross-check
+        od = np.asarray(fd(**kw))
+        oh = np.asarray(fh(*(kw[a] for a in args)))
+        assert np.allclose(od, oh, rtol=1e-5, atol=1e-5), name
+        locd, loch = _loc(mk_d), _loc(mk_h)
+        emit(f"dappa/{name}/pattern_us", td,
+             f"LOC={locd} (patterns)")
+        emit(f"dappa/{name}/handwritten_us", th,
+             f"LOC={loch}; overhead={td / th:.2f}x")
+    emit("dappa/summary", 0,
+         "patterns match hand-written results on all workloads "
+         "(thesis: 94% LOC reduction on UPMEM; here plumbing is smaller "
+         "but specs/collectives are fully hidden)")
+
+
+if __name__ == "__main__":
+    run(lambda n, t, d: print(f"{n},{t:.2f},{d}"))

@@ -1,0 +1,131 @@
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results JSONs.
+
+    PYTHONPATH=src python -m benchmarks.report [--results DIR] [--tag TAG]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+ARCH_ORDER = [
+    "stablelm-3b", "stablelm-1.6b", "internlm2-1.8b", "deepseek-coder-33b",
+    "mixtral-8x7b", "kimi-k2-1t-a32b", "recurrentgemma-2b",
+    "seamless-m4t-large-v2", "xlstm-125m", "pixtral-12b",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(results_dir: str, tag: str = "") -> List[Dict]:
+    rows = []
+    for p in sorted(glob.glob(os.path.join(results_dir, "*.json"))):
+        with open(p) as f:
+            r = json.load(f)
+        if (r.get("tag") or "") != tag:
+            continue
+        rows.append(r)
+    key = lambda r: (ARCH_ORDER.index(r["arch"]) if r["arch"] in ARCH_ORDER
+                     else 99, SHAPE_ORDER.index(r["shape"]), r["mesh"])
+    return sorted(rows, key=key)
+
+
+def fmt_e(x: float) -> str:
+    return f"{x:.2e}"
+
+
+def dryrun_table(rows: List[Dict], mesh_filter: str) -> str:
+    out = ["| arch | shape | status | mb | peak GB | steady GB | fits | "
+           "compile s |", "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if mesh_filter not in r["mesh"]:
+            continue
+        if r["status"] == "SKIP":
+            out.append(f"| {r['arch']} | {r['shape']} | SKIP (sub-quadratic "
+                       f"rule) | - | - | - | - | - |")
+            continue
+        m = r["memory"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['status']} | "
+            f"{r.get('microbatches', '-')} | {m['peak_GB']} | "
+            f"{m.get('steady_GB', '-')} | "
+            f"{'Y' if m.get('steady_fits_16GB', m['fits_16GB']) else 'N'} | "
+            f"{r.get('seconds_compile', '-')} |")
+    return "\n".join(out)
+
+
+def roofline_table(rows: List[Dict], mesh_filter: str = "data=16xmodel=16"
+                   ) -> str:
+    out = ["| arch | shape | class | compute_s | memory_s | collective_s | "
+           "dominant | MODEL/HLO flops | AI | roofline frac | "
+           "what would help |",
+           "|---|---|---|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "OK" or r["mesh"] != mesh_filter:
+            continue
+        d = r["damov"]
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {d['bottleneck_class']} | "
+            f"{fmt_e(d['compute_s'])} | {fmt_e(d['memory_s'])} | "
+            f"{fmt_e(d['collective_s'])} | **{d['dominant']}** | "
+            f"{d['useful_ratio']:.2f} | {d['arithmetic_intensity']:.0f} | "
+            f"{d['roofline_fraction']:.3f} | {_help_short(d)} |")
+    return "\n".join(out)
+
+
+def _help_short(d: Dict) -> str:
+    from repro.core import damov
+    r = damov.Roofline(**{k: v for k, v in d.items()})
+    return damov.what_would_help(r).split(":")[0]
+
+
+def collective_table(rows: List[Dict], mesh_filter: str) -> str:
+    out = ["| arch | shape | all-reduce GB | all-gather GB | "
+           "reduce-scatter GB | all-to-all GB | permute GB | wire total GB |",
+           "|---|---|---|---|---|---|---|---|"]
+    for r in rows:
+        if r["status"] != "OK" or r["mesh"] != mesh_filter:
+            continue
+        d = r["damov"]
+        bk = d.get("by_kind", {})
+        g = lambda k: f"{bk.get(k, 0) / 1e9:.1f}"
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {g('all-reduce')} | "
+            f"{g('all-gather')} | {g('reduce-scatter')} | {g('all-to-all')} | "
+            f"{g('collective-permute')} | "
+            f"{d['coll_wire_bytes'] / 1e9:.1f} |")
+    return "\n".join(out)
+
+
+def summary(rows: List[Dict]) -> str:
+    ok = sum(r["status"] == "OK" for r in rows)
+    sk = sum(r["status"] == "SKIP" for r in rows)
+    fa = sum(r["status"] == "FAIL" for r in rows)
+    return f"{ok} OK / {sk} SKIP / {fa} FAIL of {len(rows)} cells"
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--results", default=os.path.join(
+        os.path.dirname(__file__), "results"))
+    ap.add_argument("--tag", default="")
+    args = ap.parse_args()
+    rows = load(args.results, args.tag)
+    single = [r for r in rows if not r.get("multi_pod")]
+    multi = [r for r in rows if r.get("multi_pod")]
+    print("## Dry-run: single-pod (16x16 = 256 chips)\n")
+    print(summary(single) + "\n")
+    print(dryrun_table(single, "data=16"))
+    if multi:
+        print("\n## Dry-run: multi-pod (2x16x16 = 512 chips)\n")
+        print(summary(multi) + "\n")
+        print(dryrun_table(multi, "pod=2"))
+    print("\n## Roofline (single-pod)\n")
+    print(roofline_table(rows))
+    print("\n## Collective breakdown (single-pod, per-device GB/step)\n")
+    print(collective_table(rows, "data=16xmodel=16"))
+
+
+if __name__ == "__main__":
+    main()

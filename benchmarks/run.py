@@ -1,0 +1,52 @@
+"""Benchmark harness: one module per thesis table/figure (see DESIGN.md §7).
+
+Prints ``name,us_per_call,derived`` CSV. Run:
+    PYTHONPATH=src python -m benchmarks.run [--only <bench>]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+from benchmarks import (bench_damov_classify, bench_dappa_productivity,
+                        bench_kernels, bench_mimdram_utilization,
+                        bench_proteus_precision)
+
+BENCHES = {
+    "damov_classify": bench_damov_classify,
+    "mimdram_utilization": bench_mimdram_utilization,
+    "proteus_precision": bench_proteus_precision,
+    "dappa_productivity": bench_dappa_productivity,
+    "kernels": bench_kernels,
+}
+
+
+def emit(name: str, us_per_call: float, derived: str = "") -> None:
+    print(f"{name},{us_per_call:.2f},{derived}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    failed = []
+    for name, mod in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        t0 = time.time()
+        try:
+            mod.run(emit)
+            emit(f"{name}/_wall_s", (time.time() - t0) * 1e6, "bench total")
+        except Exception as e:  # noqa: BLE001
+            failed.append(name)
+            emit(f"{name}/_ERROR", 0, f"{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    if failed:
+        raise SystemExit(f"failed benches: {failed}")
+
+
+if __name__ == "__main__":
+    main()

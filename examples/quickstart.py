@@ -1,0 +1,30 @@
+"""Quickstart: train a tiny LM for 30 steps, checkpoint, then sample from it.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.configs import RunConfig
+from repro.launch.serve import serve
+from repro.launch.train import train
+
+
+def main() -> None:
+    print("=== train (pimref tiny, 30 steps) ===")
+    out = train(
+        "pimref-100m", smoke=True, steps=30, batch=8, seq=64,
+        run=RunConfig(total_steps=30, learning_rate=3e-3, warmup_steps=5,
+                      microbatches=1),
+        checkpoint_dir="/tmp/repro_quickstart", log_every=10)
+    print(f"loss: {out['losses'][0]:.3f} -> {out['final_loss']:.3f}")
+
+    print("=== serve (batched prefill + decode) ===")
+    res = serve("pimref-100m", smoke=True, batch=4, prompt_len=32, gen=8)
+    print(f"prefill {res['prefill_s']:.2f}s, "
+          f"{res['decode_s_per_tok'] * 1e3:.0f} ms/tok, "
+          f"{res['throughput_tok_s']:.1f} tok/s")
+    print("generated token ids:", np.asarray(res["tokens"][0]))
+
+
+if __name__ == "__main__":
+    main()

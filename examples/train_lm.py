@@ -1,0 +1,53 @@
+"""End-to-end driver: train the ~100M pimref LM with the full production
+stack — planner sharding, checkpoint/restart, preemption handling, straggler
+monitoring, deterministic data.
+
+On a TPU slice this is the real pretraining driver; on this CPU container use
+--steps/--seq/--batch to size the run (full config, reduced workload):
+
+    PYTHONPATH=src python examples/train_lm.py --steps 300 --seq 256 --batch 4
+"""
+import argparse
+import json
+import os
+
+import numpy as np
+
+from repro.configs import RunConfig
+from repro.launch.train import train
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-3)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced model (CI); default is the FULL ~100M config")
+    ap.add_argument("--checkpoint-dir", default="/tmp/repro_train_lm")
+    ap.add_argument("--resume", action="store_true")
+    args = ap.parse_args()
+
+    run = RunConfig(total_steps=args.steps, learning_rate=args.lr,
+                    warmup_steps=max(args.steps // 20, 5),
+                    checkpoint_every=max(args.steps // 4, 25),
+                    microbatches=1)
+    out = train("pimref-100m", smoke=args.smoke, steps=args.steps,
+                batch=args.batch, seq=args.seq, run=run,
+                checkpoint_dir=args.checkpoint_dir, resume=args.resume,
+                log_every=max(args.steps // 20, 1))
+
+    losses = out["losses"]
+    os.makedirs("examples/outputs", exist_ok=True)
+    with open("examples/outputs/train_lm_losses.json", "w") as f:
+        json.dump({"losses": losses, "args": vars(args)}, f)
+    k = max(len(losses) // 10, 1)
+    print("\nloss curve (decile means):",
+          [round(float(np.mean(losses[i:i + k])), 3)
+           for i in range(0, len(losses), k)])
+    print(f"tokens seen: {args.steps * args.batch * args.seq:,}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,137 @@
+"""Checkpointing: atomic step snapshots, async save, elastic reshard-on-load.
+
+Layout:  <dir>/step_00000100/  leaf files `<flat-key>.npy` + manifest.json.
+Writes go to a tmp dir renamed into place (atomic on POSIX), so a crash
+mid-save never corrupts the latest checkpoint. Checkpoints store *global*
+(unsharded) arrays; on restore, leaves are ``jax.device_put`` with whatever
+sharding the (possibly different-sized) new mesh plan dictates — that is the
+elastic-rescale path: save on 512 chips, resume on 256, or on CPU.
+"""
+from __future__ import annotations
+
+import json
+import os
+import re
+import shutil
+import threading
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree: Any) -> Dict[str, Any]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_leaves_with_path(tree):
+        key = jax.tree_util.keystr(path)
+        flat[key] = leaf
+    return flat
+
+
+def _key_sanitize(key: str) -> str:
+    return re.sub(r"[^A-Za-z0-9_.\-]", "_", key)
+
+
+class CheckpointManager:
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+        self.dir = directory
+        self.keep = keep
+        self.async_save = async_save
+        self._thread: Optional[threading.Thread] = None
+        os.makedirs(directory, exist_ok=True)
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, tree: Any, extra: Optional[Dict] = None,
+             block: bool = False) -> None:
+        # materialize on host before handing to the writer thread
+        host_tree = jax.tree_util.tree_map(
+            lambda x: np.asarray(jax.device_get(x)), tree)
+        self.wait()
+        if self.async_save and not block:
+            self._thread = threading.Thread(
+                target=self._write, args=(step, host_tree, extra or {}))
+            self._thread.start()
+        else:
+            self._write(step, host_tree, extra or {})
+
+    def _write(self, step: int, host_tree: Any, extra: Dict) -> None:
+        final = os.path.join(self.dir, f"step_{step:08d}")
+        tmp = final + ".tmp"
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        flat = _flatten(host_tree)
+        manifest = {"step": step, "extra": extra, "leaves": {}}
+        for key, arr in flat.items():
+            fname = _key_sanitize(key) + ".npy"
+            np.save(os.path.join(tmp, fname), arr)
+            manifest["leaves"][key] = {
+                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump(manifest, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)
+        self._gc()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = self.all_steps()
+        for s in steps[: -self.keep] if self.keep > 0 else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    # -- load -----------------------------------------------------------------
+    def all_steps(self) -> List[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            m = re.fullmatch(r"step_(\d+)", name)
+            if m:
+                out.append(int(m.group(1)))
+        return sorted(out)
+
+    def latest_step(self) -> Optional[int]:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def restore(self, template: Any, step: Optional[int] = None,
+                shardings: Optional[Any] = None) -> Tuple[int, Any]:
+        """Restore into the structure of ``template``.
+
+        ``shardings``: optional matching pytree of NamedSharding — the elastic
+        path: leaves are placed directly with the *new* mesh layout.
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        tree = load_checkpoint(os.path.join(self.dir, f"step_{step:08d}"),
+                               template)
+        if shardings is not None:
+            tree = jax.tree_util.tree_map(
+                lambda a, s: jax.device_put(a, s) if s is not None else
+                jax.device_put(a), tree, shardings)
+        return step, tree
+
+
+def load_checkpoint(path: str, template: Any) -> Any:
+    with open(os.path.join(path, "manifest.json")) as f:
+        manifest = json.load(f)
+    leaves_meta = manifest["leaves"]
+    paths = jax.tree_util.tree_leaves_with_path(template)
+    vals = []
+    for kpath, leaf in paths:
+        key = jax.tree_util.keystr(kpath)
+        if key not in leaves_meta:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = np.load(os.path.join(path, leaves_meta[key]["file"]))
+        expect = tuple(getattr(leaf, "shape", arr.shape))
+        if tuple(arr.shape) != expect:
+            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {expect}")
+        vals.append(arr)
+    treedef = jax.tree_util.tree_structure(template)
+    return jax.tree_util.tree_unflatten(treedef, vals)

@@ -1,0 +1,34 @@
+from repro.configs.base import (
+    DECODE_32K,
+    LONG_500K,
+    PREFILL_32K,
+    SHAPES,
+    SHAPES_BY_NAME,
+    TRAIN_4K,
+    ModelConfig,
+    RunConfig,
+    ShapeConfig,
+    active_param_count,
+    param_count,
+    tokens_per_step,
+)
+from repro.configs.registry import ALL_IDS, ARCH_IDS, all_configs, get_config
+
+__all__ = [
+    "ModelConfig",
+    "RunConfig",
+    "ShapeConfig",
+    "SHAPES",
+    "SHAPES_BY_NAME",
+    "TRAIN_4K",
+    "PREFILL_32K",
+    "DECODE_32K",
+    "LONG_500K",
+    "ARCH_IDS",
+    "ALL_IDS",
+    "get_config",
+    "all_configs",
+    "param_count",
+    "active_param_count",
+    "tokens_per_step",
+]

@@ -1,0 +1,35 @@
+"""Architecture registry: ``--arch <id>`` -> (CONFIG, SMOKE_CONFIG)."""
+from __future__ import annotations
+
+import importlib
+from typing import Dict, Tuple
+
+from repro.configs.base import ModelConfig
+
+_ARCH_MODULES: Dict[str, str] = {
+    "stablelm-3b": "repro.configs.stablelm_3b",
+    "stablelm-1.6b": "repro.configs.stablelm_1_6b",
+    "internlm2-1.8b": "repro.configs.internlm2_1_8b",
+    "deepseek-coder-33b": "repro.configs.deepseek_coder_33b",
+    "mixtral-8x7b": "repro.configs.mixtral_8x7b",
+    "kimi-k2-1t-a32b": "repro.configs.kimi_k2_1t",
+    "recurrentgemma-2b": "repro.configs.recurrentgemma_2b",
+    "seamless-m4t-large-v2": "repro.configs.seamless_m4t_large",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "pixtral-12b": "repro.configs.pixtral_12b",
+    "pimref-100m": "repro.configs.pimref_100m",
+}
+
+ARCH_IDS = tuple(k for k in _ARCH_MODULES if k != "pimref-100m")
+ALL_IDS = tuple(_ARCH_MODULES)
+
+
+def get_config(arch: str, smoke: bool = False) -> ModelConfig:
+    if arch not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(_ARCH_MODULES)}")
+    mod = importlib.import_module(_ARCH_MODULES[arch])
+    return mod.SMOKE_CONFIG if smoke else mod.CONFIG
+
+
+def all_configs(smoke: bool = False) -> Dict[str, ModelConfig]:
+    return {a: get_config(a, smoke) for a in ARCH_IDS}

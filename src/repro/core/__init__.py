@@ -1,0 +1,10 @@
+"""The paper's four contributions, TPU-native (see DESIGN.md):
+
+- :mod:`repro.core.damov`   -- compiled-artifact workload characterization
+- :mod:`repro.core.mimdram` -- fine-grained mesh-resource allocation (planner)
+- :mod:`repro.core.proteus` -- data-aware dynamic-precision runtime
+- :mod:`repro.core.dappa`   -- data-parallel pattern programming framework
+"""
+from repro.core import damov, dappa, mimdram, proteus
+
+__all__ = ["damov", "dappa", "mimdram", "proteus"]

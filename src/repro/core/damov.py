@@ -1,0 +1,497 @@
+"""DAMOV-on-TPU: compiled-artifact workload characterization (thesis ch. 4).
+
+The thesis' three-step methodology, re-targeted from CPU simulators to XLA
+compiled artifacts:
+
+  Step 1 — *bound identification*: a full HLO cost analysis (FLOPs, HBM
+           traffic, collective traffic) of the partitioned per-device module.
+           Unlike ``compiled.cost_analysis()``, this analyzer multiplies
+           while-loop bodies by their trip counts (scan-over-layers and
+           chunked attention would otherwise be undercounted by 10-100x).
+  Step 2 — *locality clustering*: arithmetic intensity + useful-FLOPs ratio
+           (MODEL_FLOPS / HLO_FLOPS, the remat/redundancy detector).
+  Step 3 — *bottleneck classification* into the DAMOV-class analogues
+           (MXU / MEM_BW / LAT / ICI_CONT — see DESIGN.md §2).
+
+The output drives the MIMDRAM planner and the Proteus cost model: this is the
+"characterize before you optimize" layer.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import re
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+# ---------------------------------------------------------------------------
+# Hardware constants (TPU v5e-class target; per chip)
+# ---------------------------------------------------------------------------
+PEAK_FLOPS_BF16 = 197e12        # FLOP/s
+HBM_BW = 819e9                  # B/s
+ICI_LINK_BW = 50e9              # B/s per link
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "f16": 2, "bf16": 2, "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8,
+    "f64": 8, "c64": 8, "c128": 16, "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+COLLECTIVE_OPS = (
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "collective-broadcast", "ragged-all-to-all",
+)
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.+?)\s([a-z][a-z0-9_\-]*)\((.*)$")
+_COMP_HDR = re.compile(r"^(ENTRY\s+)?%?([\w.\-]+)\s*\(.*\)\s*->.*\{")
+
+
+def _shape_bytes(type_str: str) -> int:
+    """Bytes of a (possibly tuple) HLO type string."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _shape_dims(type_str: str) -> Tuple[Tuple[int, ...], str]:
+    m = _SHAPE_RE.search(type_str)
+    if not m:
+        return (), ""
+    dims = tuple(int(d) for d in m.group(2).split(",")) if m.group(2) else ()
+    return dims, m.group(1)
+
+
+@dataclass
+class Instr:
+    name: str
+    type_str: str
+    opcode: str
+    rest: str  # operands + attrs (raw tail)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, str] = field(default_factory=dict)  # name -> type_str
+
+
+@dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_operand_bytes: float = 0.0
+    coll_wire_bytes: float = 0.0
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    bytes_by_op: Dict[str, float] = field(default_factory=dict)
+    n_collectives: int = 0
+    n_dots: int = 0
+    trip_counts: List[int] = field(default_factory=list)
+
+    def merged(self, other: "HloStats", mult: float = 1.0) -> "HloStats":
+        out = HloStats(
+            self.flops + mult * other.flops,
+            self.bytes + mult * other.bytes,
+            self.coll_operand_bytes + mult * other.coll_operand_bytes,
+            self.coll_wire_bytes + mult * other.coll_wire_bytes,
+            dict(self.by_kind),
+            dict(self.bytes_by_op),
+            self.n_collectives + other.n_collectives,
+            self.n_dots + other.n_dots,
+            self.trip_counts + other.trip_counts,
+        )
+        for k, v in other.by_kind.items():
+            out.by_kind[k] = out.by_kind.get(k, 0.0) + mult * v
+        for k, v in other.bytes_by_op.items():
+            out.bytes_by_op[k] = out.bytes_by_op.get(k, 0.0) + mult * v
+        return out
+
+
+# ---------------------------------------------------------------------------
+# Parsing
+# ---------------------------------------------------------------------------
+def parse_computations(text: str) -> Dict[str, Computation]:
+    comps: Dict[str, Computation] = {}
+    cur: Optional[Computation] = None
+    for line in text.splitlines():
+        if cur is None:
+            m = _COMP_HDR.match(line)
+            if m:
+                cur = Computation(m.group(2))
+            continue
+        if line.startswith("}"):
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, type_str, opcode, rest = m.groups()
+        inst = Instr(name, type_str.strip(), opcode, rest)
+        cur.instrs.append(inst)
+        cur.table[name] = inst.type_str
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps
+
+
+def _operand_names(rest: str) -> List[str]:
+    """Names referenced before the closing paren of the operand list."""
+    depth = 1
+    out = []
+    buf = ""
+    for ch in rest:
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                break
+        buf += ch
+    return re.findall(r"%([\w.\-]+)", buf)
+
+
+def _attr(rest: str, key: str) -> Optional[str]:
+    m = re.search(key + r"=%?([\w.\-{}]+)", rest)
+    return m.group(1) if m else None
+
+
+def _group_size(rest: str, default: int = 1) -> int:
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]", rest)
+    if m:
+        return int(m.group(2))
+    m = re.search(r"replica_groups=\{\{([0-9,]+)\}", rest)
+    if m:
+        return len(m.group(1).split(","))
+    return default
+
+
+def _dot_flops(inst: Instr, table: Dict[str, str]) -> float:
+    dims, _ = _shape_dims(inst.type_str)
+    out_elems = 1
+    for d in dims:
+        out_elems *= d
+    ops = _operand_names(inst.rest)
+    contract = 1
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", inst.rest)
+    if m and ops:
+        lhs_dims, _ = _shape_dims(table.get(ops[0], ""))
+        for ix in (m.group(1).split(",") if m.group(1) else []):
+            i = int(ix)
+            if i < len(lhs_dims):
+                contract *= lhs_dims[i]
+    return 2.0 * out_elems * contract
+
+
+def _trip_count(inst: Instr, cond: Optional[Computation]) -> int:
+    # XLA annotates known trip counts on the while instruction itself.
+    m = re.search(r'"known_trip_count":\{"n":"(\d+)"\}', inst.rest)
+    if m:
+        return int(m.group(1))
+    if cond is None:
+        return 1
+    # fallback: largest integer constant in the condition computation
+    best = 1
+    for ci in cond.instrs:
+        if ci.opcode == "constant":
+            mm = re.match(r"([0-9]+)", ci.rest)
+            if mm and _shape_dims(ci.type_str)[1] in ("s32", "u32", "s64", "u64"):
+                best = max(best, int(mm.group(1)))
+    return best
+
+
+_SKIP_BYTES = {
+    "parameter", "constant", "tuple", "get-tuple-element", "bitcast",
+    "bitcast-convert", "copy-start", "copy-done", "after-all", "partition-id",
+    "replica-id",
+}
+
+_SLICY = {"dynamic-slice", "slice", "gather"}
+
+# materialization boundaries: ops whose inputs/outputs hit HBM on TPU
+_BOUNDARY_BYTES_OPS = {
+    "dot", "convolution", "reduce", "reduce-window", "scatter", "gather",
+    "dynamic-slice", "dynamic-update-slice", "slice", "concatenate",
+    "transpose", "sort", "fusion", "copy", "pad", "reverse", "cumsum",
+    "all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+    "collective-permute", "all-reduce-start", "all-gather-start",
+    "reduce-scatter-start", "collective-permute-start", "custom-call",
+}
+
+
+def _fusion_operand_bytes(inst: Instr, comp: Computation,
+                          comps: Dict[str, Computation]) -> int:
+    """Effective operand traffic of a fusion: parameters whose only fused uses
+    are (dynamic-)slice/gather count at consumed size, not full size."""
+    ops_ = _operand_names(inst.rest)
+    called_name = _attr(inst.rest, "calls")
+    called = comps.get(called_name) if called_name else None
+    if called is None:
+        return sum(_shape_bytes(comp.table.get(o, "")) for o in ops_)
+    # map parameter index -> uses inside the fused computation
+    param_names: Dict[int, str] = {}
+    for ci in called.instrs:
+        if ci.opcode == "parameter":
+            m = re.match(r"(\d+)", ci.rest)
+            if m:
+                param_names[int(m.group(1))] = ci.name
+    total = 0
+    for i, o in enumerate(ops_):
+        full = _shape_bytes(comp.table.get(o, ""))
+        pname = param_names.get(i)
+        if pname is None:
+            total += full
+            continue
+        uses = [ci for ci in called.instrs
+                if pname in _operand_names(ci.rest)]
+        if uses and all(u.opcode in _SLICY for u in uses):
+            total += sum(_shape_bytes(u.type_str) for u in uses)
+        else:
+            total += full
+    return total
+
+_ELEMWISE_FLOP_OPS = {
+    "add", "subtract", "multiply", "divide", "power", "exponential", "tanh",
+    "log", "rsqrt", "sqrt", "maximum", "minimum", "negate", "abs", "floor",
+    "select", "compare", "convert", "cosine", "sine", "logistic",
+    "exponential-minus-one", "log-plus-one",
+}
+
+
+def analyze_computation(comp: Computation, comps: Dict[str, Computation],
+                        cache: Dict[str, HloStats], *, top_level: bool,
+                        ) -> HloStats:
+    key = comp.name + ("#t" if top_level else "#f")
+    if key in cache:
+        return cache[key]
+    st = HloStats()
+    for inst in comp.instrs:
+        op = inst.opcode
+        res_bytes = _shape_bytes(inst.type_str)
+        # ---- flops ----
+        if op == "dot":
+            st.flops += _dot_flops(inst, comp.table)
+            st.n_dots += 1
+        elif op == "convolution":
+            st.flops += 2.0 * res_bytes  # rough; models avoid conv HLO
+        elif op in _ELEMWISE_FLOP_OPS:
+            dims, dt = _shape_dims(inst.type_str)
+            n = 1
+            for d in dims:
+                n *= d
+            st.flops += n
+        # ---- collectives ----
+        base = op[:-6] if op.endswith("-start") else op
+        if base in COLLECTIVE_OPS:
+            g = _group_size(inst.rest, 1)
+            if base == "all-gather":
+                operand = res_bytes / max(g, 1)
+                wire = operand * max(g - 1, 0)
+            elif base == "reduce-scatter":
+                operand = res_bytes * g
+                wire = res_bytes * max(g - 1, 0)
+            elif base == "all-reduce":
+                operand = res_bytes
+                wire = 2.0 * operand * (max(g - 1, 0) / max(g, 1))
+            elif base in ("all-to-all", "ragged-all-to-all"):
+                operand = res_bytes
+                wire = operand * (max(g - 1, 0) / max(g, 1))
+            else:  # collective-permute / broadcast
+                operand = res_bytes
+                wire = operand
+            st.coll_operand_bytes += operand
+            st.coll_wire_bytes += wire
+            st.by_kind[base] = st.by_kind.get(base, 0.0) + operand
+            st.n_collectives += 1
+        # ---- bytes: HBM traffic at materialization boundaries only.
+        # Elementwise / broadcast / select chains fuse on TPU, so they carry
+        # no HBM cost; dots, reduces, slices, scatters, concats, copies and
+        # fusions are where buffers hit HBM.
+        if (top_level and op in _BOUNDARY_BYTES_OPS
+                and not op.endswith("-done")):
+            if op in _SLICY:
+                # slices/gathers touch only what they produce, not the source
+                opb = res_bytes
+            elif op == "dynamic-update-slice":
+                # read + write the update region only (in-place on TPU)
+                ops_ = _operand_names(inst.rest)
+                upd = _shape_bytes(comp.table.get(ops_[1], "")) if len(ops_) > 1 \
+                    else res_bytes
+                opb = 2 * upd - res_bytes  # res added below; net = 2*update
+            elif op == "fusion":
+                opb = _fusion_operand_bytes(inst, comp, comps)
+            else:
+                opb = sum(_shape_bytes(comp.table.get(o, ""))
+                          for o in _operand_names(inst.rest))
+            st.bytes += res_bytes + opb
+            st.bytes_by_op[op] = st.bytes_by_op.get(op, 0.0) + res_bytes + opb
+        # ---- control flow ----
+        if op == "while":
+            body_n = _attr(inst.rest, "body")
+            cond_n = _attr(inst.rest, "condition")
+            trips = _trip_count(inst, comps.get(cond_n) if cond_n else None)
+            if body_n and body_n in comps:
+                sub = analyze_computation(comps[body_n], comps, cache,
+                                          top_level=top_level)
+                st = st.merged(sub, float(trips))
+                st.trip_counts.append(trips)
+        elif op == "fusion":
+            called = _attr(inst.rest, "calls")
+            if called and called in comps:
+                sub = analyze_computation(comps[called], comps, cache,
+                                          top_level=False)
+                st = st.merged(sub, 1.0)
+        elif op == "call":
+            called = _attr(inst.rest, "to_apply")
+            if called and called in comps:
+                sub = analyze_computation(comps[called], comps, cache,
+                                          top_level=top_level)
+                st = st.merged(sub, 1.0)
+        elif op == "conditional":
+            branches = re.findall(r"%([\w.\-]+)", inst.rest.split("),", 1)[-1])
+            subs = [analyze_computation(comps[b], comps, cache, top_level=top_level)
+                    for b in branches if b in comps]
+            if subs:
+                biggest = max(subs, key=lambda s: s.flops)
+                st = st.merged(biggest, 1.0)
+    cache[key] = st
+    return st
+
+
+def analyze_hlo(text: str) -> HloStats:
+    """Full-module analysis of a partitioned (per-device) HLO module."""
+    comps = parse_computations(text)
+    entry = None
+    for line in text.splitlines():
+        m = _COMP_HDR.match(line)
+        if m and m.group(1):
+            entry = m.group(2)
+            break
+    if entry is None:
+        # fall back: the computation named main-ish or the largest
+        entry = max(comps, key=lambda c: len(comps[c].instrs))
+    cache: Dict[str, HloStats] = {}
+    return analyze_computation(comps[entry], comps, cache, top_level=True)
+
+
+# ---------------------------------------------------------------------------
+# Roofline (step 1 output -> step 3 classification)
+# ---------------------------------------------------------------------------
+@dataclass
+class Roofline:
+    arch: str
+    shape: str
+    mesh: str
+    n_chips: int
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    bottleneck_class: str
+    hlo_flops: float            # per device
+    hlo_bytes: float            # per device
+    coll_operand_bytes: float   # per device
+    coll_wire_bytes: float
+    model_flops: float          # global useful FLOPs (6ND / 2ND)
+    useful_ratio: float
+    arithmetic_intensity: float
+    step_time_s: float
+    roofline_fraction: float    # useful FLOPs rate / peak
+    by_kind: Dict[str, float] = field(default_factory=dict)
+    notes: str = ""
+
+    def to_json(self) -> Dict[str, Any]:
+        return dataclasses.asdict(self)
+
+
+def classify(compute_s: float, memory_s: float, collective_s: float,
+             mode: str) -> Tuple[str, str]:
+    terms = {"compute": compute_s, "memory": memory_s,
+             "collective": collective_s}
+    dominant = max(terms, key=terms.get)
+    if dominant == "collective":
+        clazz = "ICI_CONT (2a)"
+    elif dominant == "compute":
+        clazz = "MXU (2c)"
+    else:
+        clazz = "LAT (1b)" if mode == "decode" else "MEM_BW (1a)"
+    return dominant, clazz
+
+
+def make_roofline(arch: str, shape_name: str, mode: str, mesh_desc: str,
+                  n_chips: int, stats: HloStats, model_flops: float,
+                  notes: str = "") -> Roofline:
+    compute_s = stats.flops / PEAK_FLOPS_BF16
+    memory_s = stats.bytes / HBM_BW
+    collective_s = stats.coll_wire_bytes / ICI_LINK_BW
+    dominant, clazz = classify(compute_s, memory_s, collective_s, mode)
+    step = max(compute_s, memory_s, collective_s)
+    useful = model_flops / max(stats.flops * n_chips, 1.0)
+    frac = (model_flops / max(step, 1e-12)) / (n_chips * PEAK_FLOPS_BF16)
+    return Roofline(
+        arch=arch, shape=shape_name, mesh=mesh_desc, n_chips=n_chips,
+        compute_s=compute_s, memory_s=memory_s, collective_s=collective_s,
+        dominant=dominant, bottleneck_class=clazz,
+        hlo_flops=stats.flops, hlo_bytes=stats.bytes,
+        coll_operand_bytes=stats.coll_operand_bytes,
+        coll_wire_bytes=stats.coll_wire_bytes,
+        model_flops=model_flops, useful_ratio=useful,
+        arithmetic_intensity=stats.flops / max(stats.bytes, 1.0),
+        step_time_s=step, roofline_fraction=frac,
+        by_kind=dict(stats.by_kind), notes=notes,
+    )
+
+
+def model_flops_for(cfg, shape, n_active_params: int) -> float:
+    """Standard useful-FLOPs metric: 6*N*D train, 2*N*D forward-only."""
+    if shape.mode == "train":
+        per_tok = 6.0 * n_active_params
+        toks = shape.global_batch * shape.seq_len
+    elif shape.mode == "prefill":
+        per_tok = 2.0 * n_active_params
+        toks = shape.global_batch * shape.seq_len
+    else:  # decode: one token per sequence
+        per_tok = 2.0 * n_active_params
+        toks = shape.global_batch
+    return per_tok * toks
+
+
+# ---------------------------------------------------------------------------
+# Step 2/3 reporting
+# ---------------------------------------------------------------------------
+def what_would_help(r: Roofline) -> str:
+    if r.dominant == "collective":
+        big = max(r.by_kind, key=r.by_kind.get) if r.by_kind else "?"
+        return (f"dominant collective is {big}: quantize payloads (Proteus int8 "
+                f"halves the term) or re-map axes to keep that operand pod-local")
+    if r.dominant == "compute":
+        if r.useful_ratio < 0.5:
+            return ("compute-bound but useful-ratio "
+                    f"{r.useful_ratio:.2f}: cut redundant/replicated compute "
+                    "(head padding for TP, causal block-skip, less remat)")
+        return "near-roofline: only algorithmic change (sparsity, quantized matmul) helps"
+    return ("memory-bound: fuse/quantize to cut HBM traffic, enlarge per-chip "
+            "batch, or shard the dominant resident tensor (KV cache) further")
+
+
+def render_table(rows: List[Roofline]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | class | MF/HF | roofline_frac |")
+    sep = "|" + "---|" * 10
+    lines = [hdr, sep]
+    for r in rows:
+        lines.append(
+            f"| {r.arch} | {r.shape} | {r.mesh} | {r.compute_s:.3e} | "
+            f"{r.memory_s:.3e} | {r.collective_s:.3e} | {r.dominant} | "
+            f"{r.bottleneck_class} | {r.useful_ratio:.3f} | "
+            f"{r.roofline_fraction:.3f} |")
+    return "\n".join(lines)

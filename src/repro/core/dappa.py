@@ -1,0 +1,259 @@
+"""DaPPA-on-TPU: data-parallel pattern programming framework (thesis ch. 7).
+
+The thesis' five primary data-parallel pattern primitives — ``map``, ``zip``,
+``reduce``, ``window``, ``filter`` — composed through a dataflow interface
+and lowered by *template-based compilation* onto the TPU mesh:
+
+    UPMEM DaPPA                      ->  here
+    -----------------------------------------------------------------
+    CPU->DPU input transfer          ->  input sharding (data axis)
+    per-DPU kernel template          ->  per-shard jnp template
+    inter-DPU merge via host         ->  jax.lax collectives (psum/...)
+    window halo via host round-trip  ->  ppermute halo exchange
+    DPU->CPU gather                  ->  out_specs / all_gather
+
+Users never write PartitionSpecs or collectives; ``compile_pipeline``
+assembles the templates into one jit'd SPMD program (thesis Fig 7.3).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from functools import partial
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+
+# ---------------------------------------------------------------------------
+# Dataflow graph
+# ---------------------------------------------------------------------------
+@dataclass(frozen=True)
+class Stream:
+    """A lazy distributed 1-D data stream (leading axis = data axis)."""
+
+    kind: str                      # input | map | zip | window | filter
+    parents: Tuple["Stream", ...] = ()
+    fn: Optional[Callable] = None
+    name: str = ""
+    wsize: int = 0
+    fill: Any = 0
+
+    # -- pattern API (the five DaPPA primitives) -----------------------------
+    def map(self, fn: Callable) -> "Stream":
+        return Stream("map", (self,), fn)
+
+    def zip(self, *others: "Stream") -> "Stream":
+        return Stream("zip", (self,) + others)
+
+    def window(self, w: int, fn: Callable) -> "Stream":
+        """Sliding window of w elements -> fn over the window axis (last)."""
+        return Stream("window", (self,), fn, wsize=w)
+
+    def filter(self, pred: Callable, fill: Any = 0) -> "Stream":
+        return Stream("filter", (self,), pred, fill=fill)
+
+    def reduce(self, kind: str = "sum") -> "Reduction":
+        return Reduction(self, kind)
+
+
+@dataclass(frozen=True)
+class Reduction:
+    stream: Stream
+    kind: str                      # sum | max | min | mean | count
+
+
+def input_stream(name: str) -> Stream:
+    return Stream("input", (), None, name=name)
+
+
+# ---------------------------------------------------------------------------
+# Template-based lowering
+# ---------------------------------------------------------------------------
+@dataclass
+class _Ctx:
+    env: Dict[str, jax.Array]
+    axis: Optional[str]            # inside shard_map: data axis name
+    n_shards: int
+    cache: Dict[int, Tuple[jax.Array, Optional[jax.Array]]] = field(
+        default_factory=dict)
+
+
+def _halo_from_next(x: jax.Array, w: int, axis: str) -> jax.Array:
+    """Fetch the first w elements of the next shard (ring ppermute)."""
+    n = jax.lax.axis_size(axis)
+    edge = x[:w]
+    perm = [(i, (i - 1) % n) for i in range(n)]     # shard i sends to i-1
+    return jax.lax.ppermute(edge, axis, perm)
+
+
+def _eval(s: Stream, ctx: _Ctx) -> Tuple[jax.Array, Optional[jax.Array]]:
+    """Returns (values, validity_mask or None)."""
+    key = id(s)
+    if key in ctx.cache:
+        return ctx.cache[key]
+    if s.kind == "input":
+        out = (ctx.env[s.name], None)
+    elif s.kind == "map":
+        v, m = _eval(s.parents[0], ctx)
+        out = (s.fn(v), m)
+    elif s.kind == "zip":
+        vs, ms = zip(*[_eval(p, ctx) for p in s.parents])
+        mask = None
+        for m in ms:
+            if m is not None:
+                mask = m if mask is None else (mask & m)
+        out = (jnp.stack(vs, axis=-1) if all(v.ndim == vs[0].ndim for v in vs)
+               else tuple(vs), mask)
+    elif s.kind == "filter":
+        v, m = _eval(s.parents[0], ctx)
+        keep = s.fn(v).astype(bool)
+        if keep.ndim > 1:
+            keep = keep.reshape(keep.shape[0], -1).all(-1)
+        mask = keep if m is None else (m & keep)
+        out = (v, mask)
+    elif s.kind == "window":
+        v, m = _eval(s.parents[0], ctx)
+        w = s.wsize
+        n_local = v.shape[0]
+        if ctx.axis is not None:
+            halo = _halo_from_next(v, w - 1, ctx.axis)
+            ext = jnp.concatenate([v, halo], axis=0)
+            shard_ix = jax.lax.axis_index(ctx.axis)
+            gpos = shard_ix * n_local + jnp.arange(n_local)
+            n_total = n_local * ctx.n_shards
+        else:
+            pad = jnp.zeros((w - 1,) + v.shape[1:], v.dtype)
+            ext = jnp.concatenate([v, pad], axis=0)
+            gpos = jnp.arange(n_local)
+            n_total = n_local
+        wins = jnp.stack([ext[i: i + n_local] for i in range(w)], axis=-1)
+        valid = gpos <= (n_total - w)
+        mask = valid if m is None else (m & valid)
+        out = (s.fn(wins), mask)
+    else:
+        raise ValueError(s.kind)
+    ctx.cache[key] = out
+    return out
+
+
+_REDUCE_INIT = {"sum": 0.0, "max": -jnp.inf, "min": jnp.inf}
+
+
+def _eval_reduction(r: Reduction, ctx: _Ctx) -> jax.Array:
+    v, m = _eval(r.stream, ctx)
+    vf = v.astype(jnp.float32)
+    if r.kind == "count":
+        local = (m.astype(jnp.float32).sum() if m is not None
+                 else jnp.float32(v.shape[0]))
+    elif r.kind in ("sum", "mean"):
+        if m is not None:
+            vf = jnp.where(_bmask(m, vf), vf, 0.0)
+        local = vf.sum()
+    elif r.kind == "max":
+        if m is not None:
+            vf = jnp.where(_bmask(m, vf), vf, -jnp.inf)
+        local = vf.max()
+    elif r.kind == "min":
+        if m is not None:
+            vf = jnp.where(_bmask(m, vf), vf, jnp.inf)
+        local = vf.min()
+    else:
+        raise ValueError(r.kind)
+    if ctx.axis is not None:
+        if r.kind in ("sum", "mean", "count"):
+            local = jax.lax.psum(local, ctx.axis)
+        elif r.kind == "max":
+            local = jax.lax.pmax(local, ctx.axis)
+        elif r.kind == "min":
+            local = jax.lax.pmin(local, ctx.axis)
+    if r.kind == "mean":
+        cnt = _eval_reduction(Reduction(r.stream, "count"), ctx)
+        return local / jnp.maximum(cnt, 1.0)
+    return local
+
+
+def _bmask(m: jax.Array, v: jax.Array) -> jax.Array:
+    while m.ndim < v.ndim:
+        m = m[..., None]
+    return m
+
+
+# ---------------------------------------------------------------------------
+# Pipeline compiler
+# ---------------------------------------------------------------------------
+def compile_pipeline(outputs: Any, mesh: Optional[Mesh] = None,
+                     data_axis: str = "data") -> Callable:
+    """Lower a dataflow of patterns into one jit'd SPMD function.
+
+    ``outputs``: a Reduction / Stream or pytree of them. Returns
+    f(**inputs) -> matching pytree of results. With a mesh, inputs are
+    sharded on their leading dim over ``data_axis``; reductions come back
+    replicated, streams sharded.
+    """
+    leaves, treedef = jax.tree_util.tree_flatten(
+        outputs, is_leaf=lambda x: isinstance(x, (Stream, Reduction)))
+    names = _collect_inputs(leaves)
+
+    def run_local(env: Dict[str, jax.Array], axis: Optional[str], n: int):
+        ctx = _Ctx(env, axis, n)
+        res = []
+        for leaf in leaves:
+            if isinstance(leaf, Reduction):
+                res.append(_eval_reduction(leaf, ctx))
+            else:
+                v, m = _eval(leaf, ctx)
+                res.append(v if m is None else jnp.where(_bmask(m, v), v,
+                                                         leaf.fill))
+        return tuple(res)
+
+    if mesh is None:
+        def fn(**inputs):
+            out = run_local(inputs, None, 1)
+            return jax.tree_util.tree_unflatten(treedef, out)
+        return jax.jit(fn)
+
+    n_shards = mesh.shape[data_axis]
+    in_specs = {k: P(data_axis) for k in names}
+    out_specs = tuple(
+        P() if isinstance(l, Reduction) else P(data_axis) for l in leaves)
+
+    def sharded(env):
+        return run_local(env, data_axis, n_shards)
+
+    smapped = shard_map(
+        sharded, mesh=mesh,
+        in_specs=(in_specs,), out_specs=out_specs,
+        check_vma=False)
+
+    def fn(**inputs):
+        out = smapped(inputs)
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    return jax.jit(fn)
+
+
+def _collect_inputs(leaves: Sequence[Any]) -> List[str]:
+    names: List[str] = []
+
+    def walk(s: Stream):
+        if s.kind == "input" and s.name not in names:
+            names.append(s.name)
+        for p in s.parents:
+            walk(p)
+
+    for leaf in leaves:
+        walk(leaf.stream if isinstance(leaf, Reduction) else leaf)
+    return names
+
+
+# convenience namespace mirroring the thesis' API table
+def map_(s: Stream, fn: Callable) -> Stream:
+    return s.map(fn)
+
+
+def zip_(*streams: Stream) -> Stream:
+    return streams[0].zip(*streams[1:])

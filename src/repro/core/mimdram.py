@@ -1,0 +1,401 @@
+"""MIMDRAM-on-TPU: fine-grained resource allocation for a wide SIMD substrate.
+
+Thesis chapter 5 adaptation (see DESIGN.md §2.2). The DRAM row = the device
+mesh; DRAM mats = mesh segments. This module is the *sharding planner*: it
+plays the role of MIMDRAM's compiler passes + OS data-mapping support:
+
+  * discovers each tensor dimension's available parallelism (the thesis'
+    "vectorization factor", VF),
+  * allocates only the needed mesh resources to each logical axis
+    (logical-axis rules -> PartitionSpec), including MIMD segments for MoE
+    experts (different experts = different PUD ops executing concurrently),
+  * reports *segment utilization* — the thesis' SIMD-utilization metric
+    (Fig 5.13) — for every (arch x shape x mesh) cell,
+  * provides native cross-segment vector reduction (hierarchical, pod-local
+    first), MIMDRAM's reduction-tree analogue.
+
+Everything here is data-mapping policy; mechanism lives in XLA GSPMD.
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Dict, Mapping, Optional, Sequence, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeConfig
+
+# ---------------------------------------------------------------------------
+# Logical axis vocabulary
+# ---------------------------------------------------------------------------
+# Parameters
+PARAM_AXES = (
+    "embed",       # d_model dim of weight matrices (FSDP shard target)
+    "mlp",         # d_ff dim (TP shard target)
+    "heads",       # q heads
+    "kv",          # kv heads
+    "head_dim",
+    "vocab",
+    "expert",      # MoE expert dim -> MIMD segments
+    "layers",      # stacked scan dim
+    "conv",        # temporal conv taps
+)
+# Activations / caches
+ACT_AXES = (
+    "act_batch",
+    "act_seq",
+    "act_embed",
+    "act_heads",
+    "act_kv",
+    "act_hd",
+    "act_ff",
+    "act_vocab",
+    "act_expert",
+    "act_cap",      # MoE capacity slots
+    "cache_seq",    # KV-cache sequence dim (decode)
+)
+
+Rules = Dict[str, Optional[Tuple[str, ...]]]
+
+
+def _axis_size(mesh: Optional[Mesh], names: Optional[Tuple[str, ...]]) -> int:
+    if mesh is None or not names:
+        return 1
+    n = 1
+    for a in names:
+        n *= mesh.shape.get(a, 1)
+    return n
+
+
+def _divides(total: int, mesh: Optional[Mesh], names: Optional[Tuple[str, ...]]) -> bool:
+    n = _axis_size(mesh, names)
+    return n > 0 and total % n == 0
+
+
+@dataclass
+class Plan:
+    """Resolved data-mapping for one (model, shape, mesh) cell."""
+
+    rules: Rules
+    mesh: Optional[Mesh]
+    cfg: Optional[ModelConfig] = None
+    shape: Optional[ShapeConfig] = None
+    notes: Tuple[str, ...] = ()
+    # thesis Fig 5.13 analogue: fraction of the mesh doing distinct useful work
+    segment_utilization: float = 1.0
+    segments: Dict[str, int] = field(default_factory=dict)
+
+    def spec(self, *logical: Optional[str],
+             dims: Optional[Tuple[int, ...]] = None) -> P:
+        """PartitionSpec for a tensor tagged with logical axis names.
+
+        Two passes: (1) base assignments (a mesh axis may appear once);
+        (2) ZeRO-extra — 'embed'-tagged dims absorb any mesh axes listed in
+        rules['_embed_extra'] that pass 1 left unused, so parameters with no
+        TP-shardable dim (e.g. attention weights when heads don't divide the
+        mesh) still shard fully instead of replicating.
+
+        When ``dims`` (the tensor shape) is given, axes that do not evenly
+        divide their dimension are dropped right-to-left — "allocate only
+        what fits" made shape-exact.
+        """
+        parts: list = []
+        used: set = set()
+        for name in logical:
+            if name is None:
+                parts.append(None)
+                continue
+            axes = self.rules.get(name)
+            if not axes:
+                parts.append(None)
+                continue
+            ax = tuple(a for a in axes if a not in used)
+            used.update(ax)
+            parts.append(ax if ax else None)
+        extra = self.rules.get("_embed_extra") or ()
+        free = tuple(a for a in extra if a not in used)
+        if free:
+            for i, name in enumerate(logical):
+                if name == "embed":
+                    cur = parts[i]
+                    cur_t = () if cur is None else (
+                        cur if isinstance(cur, tuple) else (cur,))
+                    parts[i] = cur_t + free
+                    break
+        if dims is not None:
+            for i, p in enumerate(parts):
+                if p is None:
+                    continue
+                ax = p if isinstance(p, tuple) else (p,)
+                while ax and dims[i] % _axis_size(self.mesh, ax) != 0:
+                    ax = ax[:-1]
+                parts[i] = ax or None
+        parts = [p[0] if isinstance(p, tuple) and len(p) == 1 else p
+                 for p in parts]
+        return P(*parts)
+
+    def sharding(self, *logical: Optional[str]) -> Optional[NamedSharding]:
+        if self.mesh is None:
+            return None
+        return NamedSharding(self.mesh, self.spec(*logical))
+
+
+# ---------------------------------------------------------------------------
+# Plan context (threaded through model code via `constrain`)
+# ---------------------------------------------------------------------------
+_state = threading.local()
+
+
+def current_plan() -> Optional[Plan]:
+    return getattr(_state, "plan", None)
+
+
+@contextlib.contextmanager
+def use_plan(plan: Optional[Plan]):
+    prev = getattr(_state, "plan", None)
+    _state.plan = plan
+    try:
+        yield plan
+    finally:
+        _state.plan = prev
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """with_sharding_constraint by logical axis names; no-op without a plan.
+
+    This is the moral equivalent of MIMDRAM's mat-assignment directives: model
+    code declares *what* an axis means, the plan decides *where* it lives.
+    """
+    plan = current_plan()
+    if plan is None or plan.mesh is None:
+        return x
+    if x.ndim != len(logical):
+        raise ValueError(f"rank {x.ndim} vs logical axes {logical}")
+    # under a partial-manual shard_map (Proteus cross-pod step) XLA's SPMD
+    # partitioner CHECK-fails on many constraint/reshard patterns
+    # (spmd_partitioner_util.cc:504); let GSPMD propagate freely there.
+    from jax.sharding import AxisType  # noqa: PLC0415
+    ctx = jax.sharding.get_abstract_mesh()
+    if ctx is not None and not ctx.empty and any(
+            t == AxisType.Manual for t in getattr(ctx, "axis_types", ())):
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(plan.mesh, plan.spec(*logical, dims=tuple(x.shape)))
+    )
+
+
+# ---------------------------------------------------------------------------
+# The planner (thesis compiler-pass analogue)
+# ---------------------------------------------------------------------------
+def plan_sharding(
+    cfg: ModelConfig,
+    shape: Optional[ShapeConfig] = None,
+    mesh: Optional[Mesh] = None,
+    overrides: Optional[Mapping[str, Optional[Tuple[str, ...]]]] = None,
+) -> Plan:
+    """Allocate mesh resources to logical axes for one cell.
+
+    Strategy (priority order, mirroring MIMDRAM's VF-driven allocation):
+      data-like mesh axes ('pod','data')  <- batch; spill to sequence (SP)
+                                             when batch VF is too small;
+      'model' axis                        <- experts (MoE MIMD segments) for
+                                             FFN, heads/d_ff for attention/
+                                             dense, vocab for the LM head,
+                                             cache_seq for decode KV caches.
+    Rules are dropped (axis -> None) whenever the dimension size does not
+    divide the assigned mesh extent — the "allocate only what fits" rule.
+    """
+    notes = []
+    mesh_axes = dict(mesh.shape) if mesh is not None else {}
+    has_pod = "pod" in mesh_axes
+    data_axes: Tuple[str, ...] = (("pod", "data") if has_pod else ("data",))
+    data_axes = tuple(a for a in data_axes if a in mesh_axes)
+    model_ax: Tuple[str, ...] = ("model",) if "model" in mesh_axes else ()
+
+    n_data = _axis_size(mesh, data_axes)
+    n_model = _axis_size(mesh, model_ax)
+
+    gb = shape.global_batch if shape is not None else 0
+    seq = shape.seq_len if shape is not None else 0
+    mode = shape.mode if shape is not None else "train"
+
+    # ---- batch / sequence onto data-like axes -----------------------------
+    batch_axes: Optional[Tuple[str, ...]] = None
+    seq_axes: Optional[Tuple[str, ...]] = None
+    if gb and n_data > 1:
+        if gb % n_data == 0:
+            batch_axes = data_axes
+        else:
+            # partial allocation: use the largest prefix that divides.
+            acc: Tuple[str, ...] = ()
+            for a in data_axes:
+                cand = acc + (a,)
+                if gb % _axis_size(mesh, cand) == 0:
+                    acc = cand
+            batch_axes = acc or None
+            rest = tuple(a for a in data_axes if a not in (batch_axes or ()))
+            if rest and seq and _divides(seq, mesh, rest):
+                seq_axes = rest  # sequence-parallel spill (SP)
+                notes.append(f"SP: seq over {rest} (batch VF {gb} < {n_data})")
+            elif rest:
+                notes.append(f"idle data axes {rest}: batch VF {gb} too small")
+
+    # ---- model axis --------------------------------------------------------
+    eff_heads = cfg.tp_pad_heads or cfg.num_heads
+    heads_ok = eff_heads % max(n_model, 1) == 0
+    kv_ok = cfg.num_kv_heads % max(n_model, 1) == 0
+    ff_ok = cfg.d_ff and cfg.d_ff % max(n_model, 1) == 0
+    vocab_ok = cfg.vocab_size % max(n_model, 1) == 0
+    expert_ok = cfg.num_experts and cfg.num_experts % max(n_model, 1) == 0
+
+    # MoE capacity sharding: when experts cannot claim the model axis
+    # (E !% n_model), the capacity dim takes it instead (group-local
+    # dispatch buffers stay distributed). Shape-exact divisibility is
+    # enforced per-tensor by Plan.spec(dims=...).
+    cap_axes = model_ax if (cfg.num_experts and not expert_ok) else None
+
+    serving = mode in ("prefill", "decode")
+    # Serving keeps parameters off the data axes (no gradient reduction to
+    # amortize per-step FSDP gathers against): params live TP-sharded on the
+    # model axis (directly or via _embed_extra) and replicated across data —
+    # UNLESS the model-axis shards alone cannot fit HBM (kimi-class): then
+    # serving falls back to full FSDP sharding and pays the per-layer gather.
+    from repro.configs.base import param_count  # noqa: PLC0415
+    dtype_bytes = 2 if serving or cfg.param_dtype == "bfloat16" else 4
+    per_model_shard = param_count(cfg) * dtype_bytes / max(n_model, 1)
+    serving_needs_fsdp = serving and per_model_shard > 8e9
+    fsdp_axes = (data_axes if (n_data > 1 and
+                               (not serving or serving_needs_fsdp)) else None)
+    if serving_needs_fsdp:
+        notes.append("serving: params exceed model-axis HBM -> FSDP fallback")
+
+    rules: Rules = {
+        # params
+        "embed": fsdp_axes,                           # FSDP (train only)
+        "_embed_extra": model_ax,
+        "mlp": model_ax if ff_ok else None,
+        "heads": model_ax if heads_ok else None,
+        "kv": model_ax if kv_ok else None,
+        "head_dim": None,
+        "vocab": model_ax if vocab_ok else None,
+        "expert": model_ax if expert_ok else None,
+        "layers": None,
+        "conv": None,
+        # activations
+        "act_batch": batch_axes,
+        "act_seq": seq_axes,
+        "act_embed": None,
+        "act_heads": model_ax if heads_ok else None,
+        "act_kv": model_ax if kv_ok else None,
+        "act_hd": None,
+        "act_ff": model_ax if ff_ok else None,
+        "act_vocab": model_ax if vocab_ok else None,
+        "act_expert": model_ax if expert_ok else None,
+        "act_cap": cap_axes,
+        "cache_seq": None,
+    }
+
+    if cfg.num_experts and expert_ok:
+        notes.append(
+            f"MIMD segments: {cfg.num_experts} experts over {n_model}-wide model axis "
+            f"({cfg.num_experts // max(n_model,1)} experts/segment)"
+        )
+
+    # serving: the KV cache dominates memory. Shard a dim whose in-place
+    # update (dynamic-update-slice at the write slot) stays device-local:
+    # kv-heads if they divide the model axis, else head_dim (scores psum per
+    # tile is tiny at q_len=1). Sharding cache_seq would force SPMD to
+    # replicate the cache around every DUS. Dedicated cache_* names keep
+    # activation sharding untouched.
+    rules["cache_kv"] = model_ax if kv_ok else None
+    rules["cache_hd"] = None
+    if serving and n_model > 1 and not kv_ok:
+        if cfg.resolved_head_dim % n_model == 0:
+            rules["cache_hd"] = model_ax
+            notes.append("serving: KV cache sharded over head_dim (model axis)")
+
+    if not heads_ok and model_ax:
+        notes.append(
+            f"heads {eff_heads} !% model {n_model}: attention TP via d_ff/vocab only"
+        )
+    if not kv_ok and model_ax:
+        notes.append(f"kv heads {cfg.num_kv_heads} !% model {n_model}: kv replicated")
+
+    if overrides:
+        rules.update(dict(overrides))
+
+    # ---- segment utilization (thesis SIMD-utilization metric) --------------
+    util = 1.0
+    if mesh is not None:
+        used = 1
+        total = 1
+        for a, s in mesh_axes.items():
+            total *= s
+        batch_used = _axis_size(mesh, rules.get("act_batch")) * _axis_size(
+            mesh, rules.get("act_seq")
+        )
+        model_used = max(
+            _axis_size(mesh, rules.get("act_expert")),
+            _axis_size(mesh, rules.get("act_heads")),
+            _axis_size(mesh, rules.get("act_ff")),
+            _axis_size(mesh, rules.get("cache_seq")),
+            1,
+        )
+        used = batch_used * model_used
+        util = used / max(total, 1)
+
+    segs = {
+        "expert_segments": min(cfg.num_experts or 1, n_model or 1),
+        "data_ways": _axis_size(mesh, rules.get("act_batch")),
+        "seq_ways": _axis_size(mesh, rules.get("act_seq")),
+        "model_ways": n_model,
+    }
+
+    return Plan(
+        rules=rules,
+        mesh=mesh,
+        cfg=cfg,
+        shape=shape,
+        notes=tuple(notes),
+        segment_utilization=util,
+        segments=segs,
+    )
+
+
+# ---------------------------------------------------------------------------
+# Native vector reduction (thesis §5.2: cross-mat reduction trees)
+# ---------------------------------------------------------------------------
+def reduce_hierarchical(
+    x: jax.Array, axes: Sequence[str], pod_axis: str = "pod"
+) -> jax.Array:
+    """psum with pod-local-first scheduling, for use inside shard_map.
+
+    MIMDRAM performs reductions first within a mat, then across mats through
+    the low-cost inter-mat interconnect. The ICI analogue: reduce within a pod
+    (fast links) before crossing the inter-pod links, so the slow hop carries
+    a single pre-reduced operand.
+    """
+    local = tuple(a for a in axes if a != pod_axis)
+    if local:
+        x = jax.lax.psum(x, local)
+    if pod_axis in axes:
+        x = jax.lax.psum(x, pod_axis)
+    return x
+
+
+def vf_report(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, int]:
+    """Available parallelism per logical dimension (thesis Fig 5.1 analogue)."""
+    return {
+        "batch": shape.global_batch,
+        "seq": shape.seq_len if shape.mode != "decode" else 1,
+        "heads": cfg.num_heads,
+        "kv_heads": cfg.num_kv_heads,
+        "d_ff": cfg.d_ff,
+        "experts": cfg.num_experts,
+        "vocab": cfg.vocab_size,
+    }

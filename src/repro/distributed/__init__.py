@@ -1,0 +1,7 @@
+from repro.distributed.fault_tolerance import (PreemptionHandler,
+                                               RestartManifest,
+                                               StragglerMonitor)
+from repro.distributed.pipeline import bubble_fraction, pipelined_forward
+
+__all__ = ["PreemptionHandler", "StragglerMonitor", "RestartManifest",
+           "pipelined_forward", "bubble_fraction"]

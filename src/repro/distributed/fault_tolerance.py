@@ -1,0 +1,98 @@
+"""Fault tolerance: preemption, stragglers, elastic-restart manifest.
+
+At 1000+ nodes the failure model is: (i) planned preemption (SIGTERM with a
+grace window), (ii) hard node loss (step never completes), (iii) stragglers
+(step completes but slowly). The three mechanisms here cover them:
+
+* :class:`PreemptionHandler` — SIGTERM/SIGINT -> synchronous checkpoint at
+  the next step boundary, then clean exit (requeue-able).
+* :class:`StragglerMonitor` — per-step wall-time EMA; steps slower than
+  ``threshold x`` EMA are flagged. On a real fleet the flag feeds the
+  controller that cordons the slow host and triggers an elastic restart
+  without it; here it logs and records into the manifest.
+* :class:`RestartManifest` — tiny JSON (step, mesh shape, data cursor,
+  checkpoint path). Because checkpoints are layout-agnostic (global arrays)
+  and the data pipeline is ``batch(step)``-deterministic, a restart may use
+  a *different* device count: the launcher re-plans shardings for the
+  surviving mesh and resumes the exact token stream.
+"""
+from __future__ import annotations
+
+import json
+import os
+import signal
+import time
+from dataclasses import asdict, dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+
+class PreemptionHandler:
+    """Convert SIGTERM/SIGINT into a checkpoint-at-step-boundary request."""
+
+    def __init__(self, signals=(signal.SIGTERM, signal.SIGINT)):
+        self.requested = False
+        self._prev = {}
+        self._signals = signals
+
+    def install(self) -> "PreemptionHandler":
+        for s in self._signals:
+            self._prev[s] = signal.signal(s, self._handler)
+        return self
+
+    def uninstall(self) -> None:
+        for s, h in self._prev.items():
+            signal.signal(s, h)
+        self._prev.clear()
+
+    def _handler(self, signum, frame):
+        self.requested = True
+
+
+class StragglerMonitor:
+    def __init__(self, threshold: float = 2.0, ema: float = 0.9,
+                 warmup_steps: int = 5):
+        self.threshold = threshold
+        self.ema_coef = ema
+        self.warmup = warmup_steps
+        self.ema: Optional[float] = None
+        self.n = 0
+        self.flagged: List[Dict[str, float]] = []
+        self._t0: Optional[float] = None
+
+    def step_start(self) -> None:
+        self._t0 = time.monotonic()
+
+    def step_end(self, step: int) -> Optional[Dict[str, float]]:
+        dt = time.monotonic() - (self._t0 or time.monotonic())
+        self.n += 1
+        flag = None
+        if self.ema is not None and self.n > self.warmup and \
+                dt > self.threshold * self.ema:
+            flag = {"step": step, "seconds": dt, "ema": self.ema}
+            self.flagged.append(flag)
+        self.ema = dt if self.ema is None else (
+            self.ema_coef * self.ema + (1 - self.ema_coef) * dt)
+        return flag
+
+
+@dataclass
+class RestartManifest:
+    step: int
+    checkpoint_dir: str
+    mesh_shape: List[int]
+    mesh_axes: List[str]
+    data_seed: int
+    arch: str = ""
+    shape: str = ""
+    straggler_events: List[Dict[str, float]] = field(default_factory=list)
+
+    def save(self, path: str) -> None:
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(asdict(self), f)
+        os.rename(tmp, path)
+
+    @classmethod
+    def load(cls, path: str) -> "RestartManifest":
+        with open(path) as f:
+            return cls(**json.load(f))

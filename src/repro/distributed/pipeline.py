@@ -1,0 +1,103 @@
+"""Pipeline parallelism over the 'pod' axis (GPipe-style, shard_map+ppermute).
+
+The MIMDRAM segment story applied across pods: each pod is a segment running
+a different *stage program* (true MIMD at pod granularity), activations flow
+stage-to-stage over the inter-pod links via ``collective_permute``, and
+microbatches fill the pipeline (bubble fraction (P-1)/(P-1+M)).
+
+This is the optional ``--pipeline`` path for multi-pod training of deep
+stacks: stage s owns layers [s*L/P, (s+1)*L/P); within a stage, the usual
+planner distribution (FSDP/TP) applies on the data/model axes (partial-auto
+shard_map: only the pod axis is manual here).
+
+Self-contained: any per-layer block function ``block_fn(params_l, x) -> x``
+works; correctness is tested against the sequential stack in
+tests/distributed_worker.py (mode: pipeline).
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+def _stage_slice(params_stacked: Any, stage: jax.Array, layers_per_stage: int):
+    """Slice this stage's layer block out of (L, ...) stacked params."""
+    return jax.tree_util.tree_map(
+        lambda a: jax.lax.dynamic_slice_in_dim(
+            a, stage * layers_per_stage, layers_per_stage, axis=0),
+        params_stacked)
+
+
+def pipelined_forward(
+    block_fn: Callable[[Any, jax.Array], jax.Array],
+    params_stacked: Any,
+    x: jax.Array,                       # (M, mb, ...) microbatched input
+    *,
+    mesh: Mesh,
+    n_stages: int,
+    n_layers: int,
+    pod_axis: str = "pod",
+) -> jax.Array:
+    """Run a layer stack as an n_stages pipeline over ``pod_axis``.
+
+    x carries M microbatches; returns the stack output in the same layout.
+    Schedule: M + n_stages - 1 ticks; at each tick a stage applies its
+    layers to the activation it holds, then shifts it to the next stage.
+    """
+    assert n_layers % n_stages == 0
+    lps = n_layers // n_stages
+    M = x.shape[0]
+
+    def per_stage(params_all, xs):
+        stage = jax.lax.axis_index(pod_axis)
+        my_params = _stage_slice(params_all, stage, lps)
+        n_ticks = M + n_stages - 1
+        perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
+
+        def run_block(act):
+            def body(h, layer_p):
+                return block_fn(layer_p, h), None
+            out, _ = jax.lax.scan(body, act, my_params)
+            return out
+
+        def tick(carry, t):
+            acc, cur = carry
+            # stage 0 feeds a fresh microbatch while any remain
+            mb_idx = jnp.clip(t, 0, M - 1)
+            fresh = jax.lax.dynamic_index_in_dim(xs, mb_idx, 0, keepdims=False)
+            cur = jnp.where(stage == 0,
+                            jnp.where(t < M, fresh, cur), cur)
+            cur = run_block(cur)
+            # last stage retires microbatch t-(P-1)
+            out_idx = jnp.clip(t - (n_stages - 1), 0, M - 1)
+            retire = (stage == n_stages - 1) & (t >= n_stages - 1)
+            acc = jnp.where(
+                retire,
+                jax.lax.dynamic_update_index_in_dim(acc, cur, out_idx, 0),
+                acc)
+            # shift activations to the next stage
+            cur = jax.lax.ppermute(cur, pod_axis, perm)
+            return (acc, cur), None
+
+        acc0 = jnp.zeros_like(xs)
+        cur0 = jnp.zeros_like(xs[0])
+        (acc, _), _ = jax.lax.scan(tick, (acc0, cur0),
+                                   jnp.arange(n_ticks, dtype=jnp.int32))
+        # only the last stage holds results; psum replicates them pod-wide
+        return jax.lax.psum(acc, pod_axis)
+
+    fn = jax.shard_map(
+        per_stage, mesh=mesh,
+        in_specs=(P(), P()),            # params + activations replicated on pod
+        out_specs=P(),
+        axis_names=frozenset({pod_axis}), check_vma=False)
+    return fn(params_stacked, x)
+
+
+def bubble_fraction(n_stages: int, n_microbatches: int) -> float:
+    """GPipe bubble overhead: (P-1)/(P-1+M)."""
+    return (n_stages - 1) / (n_stages - 1 + n_microbatches)

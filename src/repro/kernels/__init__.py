@@ -1,0 +1,9 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships kernel.py (pl.pallas_call + BlockSpec VMEM tiling),
+ops.py (jit'd wrapper) and ref.py (pure-jnp oracle); validated with
+interpret=True on CPU, targeted at TPU.
+"""
+from repro.kernels.common import use_interpret
+
+__all__ = ["use_interpret"]

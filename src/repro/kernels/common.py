@@ -1,0 +1,13 @@
+"""Shared kernel utilities: interpret-mode selection."""
+from __future__ import annotations
+
+import os
+
+import jax
+
+
+def use_interpret() -> bool:
+    """Pallas interpret mode: on unless running on a real TPU."""
+    if os.environ.get("REPRO_PALLAS_INTERPRET"):
+        return os.environ["REPRO_PALLAS_INTERPRET"] != "0"
+    return jax.default_backend() != "tpu"

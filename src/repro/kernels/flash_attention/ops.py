@@ -1,0 +1,34 @@
+"""jit'd public wrapper: GQA-aware flash attention."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_bh
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: bool | None = None) -> jax.Array:
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D) with Hq % Hkv == 0."""
+    if interpret is None:
+        interpret = use_interpret()
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    qb = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kb = k.transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
+    vb = v.transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
+    ob = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
+                            block_q=block_q, block_k=block_k,
+                            interpret=interpret)
+    return ob.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)

@@ -1,0 +1,6 @@
+from repro.kernels.narrow_value.ops import pack_int4, required_bits, unpack_int4
+from repro.kernels.narrow_value.ref import (pack_int4_ref, required_bits_ref,
+                                            unpack_int4_ref)
+
+__all__ = ["required_bits", "pack_int4", "unpack_int4", "required_bits_ref",
+           "pack_int4_ref", "unpack_int4_ref"]

@@ -1,0 +1,34 @@
+"""jit'd wrappers for narrow-value detection / int4 packing."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.narrow_value.kernel import (pack_int4_kernel,
+                                               required_bits_kernel,
+                                               unpack_int4_kernel)
+
+
+@partial(jax.jit, static_argnames=("block", "interpret"))
+def required_bits(x: jax.Array, block: int = 256,
+                  interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = use_interpret()
+    return required_bits_kernel(x, block, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def pack_int4(v: jax.Array, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = use_interpret()
+    return pack_int4_kernel(v, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("interpret",))
+def unpack_int4(p: jax.Array, interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = use_interpret()
+    return unpack_int4_kernel(p, interpret=interpret)

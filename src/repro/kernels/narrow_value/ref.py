@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the narrow-value kernels."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def required_bits_ref(x: jax.Array, block: int = 256) -> jax.Array:
+    n = x.shape[0]
+    m = jnp.abs(x.reshape(n // block, block).astype(jnp.float32)).max(axis=1)
+    return jnp.where(m == 0, 1,
+                     (jnp.ceil(jnp.log2(m + 1.0)) + 1.0).astype(jnp.int32))
+
+
+def pack_int4_ref(v: jax.Array) -> jax.Array:
+    lo = (v[0::2] & 0x0F).astype(jnp.uint8)
+    hi = (v[1::2] & 0x0F).astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4_ref(p: jax.Array) -> jax.Array:
+    pu = p.astype(jnp.uint8)
+    lo = (pu & 0x0F).astype(jnp.int8)
+    hi = ((pu >> 4) & 0x0F).astype(jnp.int8)
+    sx = lambda t: jnp.where(t >= 8, t - 16, t).astype(jnp.int8)
+    return jnp.stack([sx(lo), sx(hi)], axis=-1).reshape(-1)

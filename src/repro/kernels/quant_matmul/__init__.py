@@ -1,0 +1,6 @@
+from repro.kernels.quant_matmul.ops import quant_matmul, quantize_weights
+from repro.kernels.quant_matmul.ref import (dequantize_ref, quant_matmul_ref,
+                                            quantize_weights_ref)
+
+__all__ = ["quant_matmul", "quantize_weights", "quant_matmul_ref",
+           "quantize_weights_ref", "dequantize_ref"]

@@ -1,0 +1,28 @@
+"""jit'd public wrappers for the Proteus quantized matmul."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.quant_matmul.kernel import quant_matmul_kernel
+from repro.kernels.quant_matmul.ref import quantize_weights_ref
+
+
+@partial(jax.jit, static_argnames=("block_k", "bits"))
+def quantize_weights(w: jax.Array, block_k: int = 128, bits: int = 8):
+    return quantize_weights_ref(w, block_k=block_k, bits=bits)
+
+
+@partial(jax.jit, static_argnames=("block_m", "block_n", "block_k",
+                                   "interpret"))
+def quant_matmul(x: jax.Array, codes: jax.Array, scales: jax.Array, *,
+                 block_m: int = 128, block_n: int = 128, block_k: int = 128,
+                 interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = use_interpret()
+    return quant_matmul_kernel(x, codes, scales, block_m=block_m,
+                               block_n=block_n, block_k=block_k,
+                               interpret=interpret)

@@ -1,0 +1,30 @@
+"""Pure-jnp oracle: block-dequantize then matmul."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def quantize_weights_ref(w: jax.Array, block_k: int = 128, bits: int = 8):
+    """w: (K, N) -> (codes int8 (K,N), scales (K//block_k, N))."""
+    K, N = w.shape
+    assert K % block_k == 0
+    qmax = float(2 ** (bits - 1) - 1)
+    wb = w.reshape(K // block_k, block_k, N).astype(jnp.float32)
+    maxabs = jnp.abs(wb).max(axis=1)                       # (nkb, N)
+    scale = jnp.where(maxabs == 0, 1.0, maxabs / qmax)
+    codes = jnp.clip(jnp.round(wb / scale[:, None, :]), -qmax - 1, qmax)
+    return codes.reshape(K, N).astype(jnp.int8), scale
+
+
+def dequantize_ref(codes: jax.Array, scales: jax.Array) -> jax.Array:
+    K, N = codes.shape
+    nkb = scales.shape[0]
+    cb = codes.reshape(nkb, K // nkb, N).astype(jnp.float32)
+    return (cb * scales[:, None, :]).reshape(K, N)
+
+
+def quant_matmul_ref(x: jax.Array, codes: jax.Array,
+                     scales: jax.Array) -> jax.Array:
+    w = dequantize_ref(codes, scales)
+    return x.astype(jnp.float32) @ w

@@ -1,0 +1,4 @@
+from repro.kernels.rglru.ops import rglru_scan
+from repro.kernels.rglru.ref import rglru_scan_ref
+
+__all__ = ["rglru_scan", "rglru_scan_ref"]

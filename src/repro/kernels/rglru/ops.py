@@ -1,0 +1,19 @@
+"""jit'd wrapper for the RG-LRU recurrence kernel."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.common import use_interpret
+from repro.kernels.rglru.kernel import rglru_scan_kernel
+
+
+@partial(jax.jit, static_argnames=("block_t", "interpret"))
+def rglru_scan(a: jax.Array, b: jax.Array, block_t: int = 128,
+               interpret: bool | None = None) -> jax.Array:
+    if interpret is None:
+        interpret = use_interpret()
+    return rglru_scan_kernel(a.astype(jnp.float32), b.astype(jnp.float32),
+                             block_t=block_t, interpret=interpret)

@@ -1,0 +1,209 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first lines: jax locks device count on first init. The 512
+#   placeholder host devices exist ONLY in this process (dry-run); smoke
+#   tests and benches see the real 1-device platform.
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell:
+  * the MIMDRAM planner resolves the data mapping,
+  * the step function (train_step or serve_step) is jit'd with explicit
+    in_shardings and lowered against ShapeDtypeStruct stand-ins,
+  * ``compiled.memory_analysis()`` proves per-device fit,
+  * ``compiled.cost_analysis()`` + the DAMOV HLO analyzer (trip-count-aware)
+    produce the roofline terms recorded in EXPERIMENTS.md.
+
+Usage:
+  python -m repro.launch.dryrun --arch stablelm-3b --shape train_4k
+  python -m repro.launch.dryrun --all --mesh both --out benchmarks/results
+  python -m repro.launch.dryrun --arch kimi-k2-1t-a32b --shape train_4k \
+      --proteus --tag proteus_int8
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+
+from repro.configs import (ARCH_IDS, RunConfig, SHAPES_BY_NAME, get_config)
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import damov
+from repro.core.mimdram import plan_sharding
+from repro.launch import mesh as mesh_lib
+from repro.launch import steps as steps_lib
+from repro.models import module as mod
+
+HBM_PER_CHIP = 16 * 1024 ** 3  # v5e-class
+
+
+def active_param_count_from_specs(model, cfg: ModelConfig) -> int:
+    total = mod.count_params(model.param_specs())
+    if cfg.num_experts and cfg.experts_per_token:
+        per_expert = 3 * cfg.d_model * cfg.d_ff
+        inactive = cfg.num_layers * (cfg.num_experts - cfg.experts_per_token) \
+            * per_expert
+        return total - inactive
+    return total
+
+
+def skip_reason(cfg: ModelConfig, shape: ShapeConfig) -> Optional[str]:
+    if shape.name == "long_500k" and not cfg.is_subquadratic:
+        return ("full-attention arch: 524k dense KV cache at batch 1 is "
+                "architecturally meaningless (assignment rule); runs only for "
+                "SSM/hybrid/sliding-window archs")
+    return None
+
+
+def run_cell(arch: str, shape_name: str, multi_pod: bool, run: RunConfig,
+             overrides: Dict[str, Any], tag: str, out_dir: str,
+             verbose: bool = True) -> Dict[str, Any]:
+    cfg = get_config(arch)
+    shape = SHAPES_BY_NAME[shape_name]
+    if shape.mode in ("prefill", "decode"):
+        # serving runs bf16 weights (standard practice; int8 via Proteus is
+        # the beyond-paper step recorded separately in §Perf)
+        cfg = cfg.replace(param_dtype="bfloat16")
+    if overrides:
+        cfg = cfg.replace(**overrides)
+    mesh = mesh_lib.make_production_mesh(multi_pod=multi_pod)
+    mdesc = mesh_lib.describe(mesh)
+    chips = mesh_lib.n_chips(mesh)
+    row: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "mesh": mdesc, "tag": tag,
+        "multi_pod": multi_pod, "chips": chips, "status": "pending",
+    }
+
+    reason = skip_reason(cfg, shape)
+    if reason:
+        row.update(status="SKIP", reason=reason)
+        _save(row, out_dir)
+        return row
+
+    t0 = time.time()
+    try:
+        plan = plan_sharding(cfg, shape, mesh)
+        (model, step, args, shardings, donate, eff_run,
+         out_sh) = steps_lib.cell_artifacts(cfg, shape, plan, run)
+        row["microbatches"] = eff_run.microbatches
+        jitted = jax.jit(step, in_shardings=shardings, out_shardings=out_sh,
+                         donate_argnums=donate or None)
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis() or {}
+        stats = damov.analyze_hlo(compiled.as_text())
+        n_active = active_param_count_from_specs(model, cfg)
+        mf = damov.model_flops_for(cfg, shape, n_active)
+        roof = damov.make_roofline(arch, shape_name, shape.mode, mdesc, chips,
+                                   stats, mf, notes="; ".join(plan.notes))
+
+        arg_b = getattr(mem, "argument_size_in_bytes", 0)
+        tmp_b = getattr(mem, "temp_size_in_bytes", 0)
+        out_b = getattr(mem, "output_size_in_bytes", 0)
+        peak = arg_b + tmp_b
+        # steady-state bound: args + outputs (donation aliases in/out on TPU;
+        # CPU-XLA scan bodies copy caches in/out, inflating temp_bytes)
+        steady = arg_b + out_b
+        row.update(
+            status="OK",
+            seconds_lower=round(t_lower, 1),
+            seconds_compile=round(t_compile, 1),
+            memory={"argument_bytes": int(arg_b), "temp_bytes": int(tmp_b),
+                    "output_bytes": int(out_b), "peak_bytes": int(peak),
+                    "fits_16GB": bool(peak <= HBM_PER_CHIP),
+                    "peak_GB": round(peak / 2 ** 30, 2),
+                    "steady_GB": round(steady / 2 ** 30, 2),
+                    "steady_fits_16GB": bool(steady <= HBM_PER_CHIP)},
+            xla_cost={"flops": cost.get("flops", 0.0),
+                      "bytes_accessed": cost.get("bytes accessed", 0.0)},
+            damov=dataclasses.asdict(roof),
+            plan={"notes": list(plan.notes),
+                  "segment_utilization": plan.segment_utilization,
+                  "segments": plan.segments,
+                  "rules": {k: list(v) if v else None
+                            for k, v in plan.rules.items()}},
+            params_total=mod.count_params(model.param_specs()),
+            params_active=n_active,
+        )
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mdesc}{' #'+tag if tag else ''}] "
+                  f"OK peak={row['memory']['peak_GB']}GB "
+                  f"dominant={roof.dominant} class={roof.bottleneck_class} "
+                  f"rf={roof.roofline_fraction:.3f} "
+                  f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)")
+            print(f"  terms: compute={roof.compute_s:.3e}s "
+                  f"memory={roof.memory_s:.3e}s coll={roof.collective_s:.3e}s "
+                  f"MF/HF={roof.useful_ratio:.3f}")
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        row.update(status="FAIL", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+        if verbose:
+            print(f"[{arch} x {shape_name} x {mdesc}] FAIL: {e}")
+    _save(row, out_dir)
+    return row
+
+
+def _save(row: Dict[str, Any], out_dir: str) -> None:
+    os.makedirs(out_dir, exist_ok=True)
+    tag = ("_" + row["tag"]) if row.get("tag") else ""
+    name = f"{row['arch']}_{row['shape']}_{row['mesh']}{tag}.json"
+    with open(os.path.join(out_dir, name.replace("=", "")), "w") as f:
+        json.dump(row, f, indent=1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, choices=list(ARCH_IDS) + [None])
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES_BY_NAME) + [None])
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--mesh", default="single", choices=["single", "multi",
+                                                         "both"])
+    ap.add_argument("--out", default="benchmarks/results")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--proteus", action="store_true",
+                    help="quantized cross-pod gradient reduction (multi-pod)")
+    ap.add_argument("--proteus-bits", type=int, default=8)
+    ap.add_argument("--microbatches", type=int, default=0)
+    ap.add_argument("--set", action="append", default=[],
+                    help="ModelConfig overrides k=v (e.g. attn_block_skip=1)")
+    args = ap.parse_args()
+
+    run = RunConfig(proteus_enabled=args.proteus,
+                    proteus_grad_bits=args.proteus_bits,
+                    microbatches=args.microbatches)
+    overrides: Dict[str, Any] = {}
+    for kv in args.set:
+        k, v = kv.split("=", 1)
+        cur = getattr(ModelConfig, k, None)
+        overrides[k] = type(cur)(eval(v)) if cur is not None else eval(v)
+
+    archs = list(ARCH_IDS) if (args.all or not args.arch) else [args.arch]
+    shapes = list(SHAPES_BY_NAME) if (args.all or not args.shape) \
+        else [args.shape]
+    meshes = {"single": [False], "multi": [True], "both": [False, True]}[
+        args.mesh]
+
+    results = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                results.append(run_cell(arch, shape, mp, run, overrides,
+                                        args.tag, args.out))
+    ok = sum(r["status"] == "OK" for r in results)
+    sk = sum(r["status"] == "SKIP" for r in results)
+    fa = sum(r["status"] == "FAIL" for r in results)
+    print(f"\ndry-run: {ok} OK, {sk} SKIP, {fa} FAIL / {len(results)} cells")
+    if fa:
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

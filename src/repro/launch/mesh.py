@@ -1,0 +1,36 @@
+"""Production mesh construction.
+
+A function — not a module-level constant — so importing never touches JAX
+device state. The dry-run process sets XLA_FLAGS for 512 host devices before
+any JAX import; tests and benches see the real (1-device) platform.
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_local_mesh(axes: Tuple[str, ...] = ("data",)) -> Mesh:
+    """Mesh over whatever devices exist (tests / CPU examples)."""
+    n = len(jax.devices())
+    shape = (n,) + (1,) * (len(axes) - 1)
+    return jax.make_mesh(shape, axes)
+
+
+def describe(mesh: Mesh) -> str:
+    return "x".join(f"{k}={v}" for k, v in mesh.shape.items())
+
+
+def n_chips(mesh: Mesh) -> int:
+    n = 1
+    for v in mesh.shape.values():
+        n *= v
+    return n

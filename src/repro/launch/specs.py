@@ -1,0 +1,70 @@
+"""ShapeDtypeStruct stand-ins for every model input (dry-run path).
+
+Weak-type-correct, shardable, no device allocation. ``input_specs`` covers
+train/prefill batches; decode cells additionally take the cache specs from
+``jax.eval_shape`` over the model's ``init_cache``.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core.mimdram import Plan
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> Dict[str, Any]:
+    """Batch stand-ins for one (arch x shape) cell."""
+    B, S = shape.global_batch, shape.seq_len
+    tok = lambda s: jax.ShapeDtypeStruct(s, jnp.int32)
+    f32 = lambda s: jax.ShapeDtypeStruct(s, jnp.float32)
+
+    if shape.mode == "decode":
+        batch: Dict[str, Any] = {"tokens": tok((B, 1))}
+        return batch
+
+    batch = {"tokens": tok((B, S))}
+    if shape.mode == "train":
+        batch["labels"] = tok((B, S))
+    if cfg.family == "vlm":
+        P = min(cfg.num_patches, S // 2)
+        batch["tokens"] = tok((B, S - P))
+        if shape.mode == "train":
+            batch["labels"] = tok((B, S - P))
+        batch["patch_embeds"] = f32((B, P, cfg.d_model))
+    if cfg.family == "audio":
+        batch["src_embeds"] = f32((B, int(S * cfg.src_len_ratio), cfg.d_model))
+    return batch
+
+
+def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, plan: Plan) -> Dict:
+    """PartitionSpec tree matching input_specs."""
+    specs = input_specs(cfg, shape)
+    out = {}
+    for k, v in specs.items():
+        if v.ndim == 2:
+            out[k] = plan.spec("act_batch", "act_seq" if shape.mode != "decode"
+                               else None)
+        else:
+            out[k] = plan.spec("act_batch", "act_seq", "act_embed")
+    return out
+
+
+def cache_specs(model, shape: ShapeConfig) -> Any:
+    """Abstract KV/state cache via eval_shape (no allocation)."""
+    return jax.eval_shape(
+        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+
+
+def cache_pspecs(model, plan: Plan, shape: Optional[ShapeConfig] = None) -> Any:
+    axes_tree = model.cache_logical_axes()
+    if shape is not None:
+        shapes_tree = cache_specs(model, shape)
+        return jax.tree_util.tree_map(
+            lambda axes, sd: plan.spec(*axes, dims=sd.shape), axes_tree,
+            shapes_tree, is_leaf=lambda x: isinstance(x, tuple))
+    return jax.tree_util.tree_map(
+        lambda axes: plan.spec(*axes), axes_tree,
+        is_leaf=lambda x: isinstance(x, tuple))

@@ -1,0 +1,231 @@
+"""Step builders: jit'd train / prefill / decode steps wired to the planner.
+
+``make_train_step`` returns (step_fn, in_shardings, donate) ready for
+``jax.jit``; the Proteus variant swaps the implicit cross-pod gradient
+all-reduce for a quantized int8 reduction via a partial-manual shard_map over
+the 'pod' axis (data/model stay GSPMD-auto) — hierarchical, narrow-value
+aware, per DESIGN.md §2.3.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
+from repro.core import proteus
+from repro.core.mimdram import Plan, plan_sharding, use_plan
+from repro.launch import specs as specs_lib
+from repro.models import module as mod
+from repro.optim import Optimizer
+
+
+def named(plan: Plan, pspec_tree):
+    return jax.tree_util.tree_map(
+        lambda s: NamedSharding(plan.mesh, s), pspec_tree,
+        is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# Train
+# ---------------------------------------------------------------------------
+def auto_microbatches(cfg: ModelConfig, shape: ShapeConfig, plan: Plan,
+                      budget_bytes: float = 5e9) -> int:
+    """Pick grad-accumulation factor so saved activations + logits fit.
+
+    Rough per-device model: saved scan carries (B_loc*S*d*2B*L_saved) plus
+    logits round-trip (B_loc*S*V_loc*6B)."""
+    from repro.core.mimdram import _axis_size  # noqa: PLC0415
+
+    if shape.mode != "train":
+        return 1
+    if cfg.microbatches_hint:
+        return cfg.microbatches_hint
+    dw = _axis_size(plan.mesh, plan.rules.get("act_batch")) or 1
+    vw = _axis_size(plan.mesh, plan.rules.get("act_vocab")) or 1
+    b_loc = max(shape.global_batch // dw, 1)
+    saved = b_loc * shape.seq_len * cfg.d_model * 2 * max(cfg.num_layers, 1)
+    logits = b_loc * shape.seq_len * (cfg.vocab_size / vw) * 6
+    est = saved + logits
+    nm = 1
+    while est / nm > budget_bytes and nm < b_loc:
+        nm *= 2
+    return nm
+
+
+def _loss_and_grads(model, params, batch, nm: int):
+    """value_and_grad with optional lax.scan gradient accumulation.
+
+    Gradients are re-pinned to the parameter shardings (ZeRO-2: the data-axis
+    reduce-scatter happens per layer inside the loop, not on a full-size
+    unsharded stack afterwards)."""
+    specs = model.param_specs()
+    if nm <= 1:
+        loss, grads = jax.value_and_grad(model.loss)(params, batch)
+        return loss, mod.constrain_tree(grads, specs)
+
+    def split(x):
+        return x.reshape((nm, x.shape[0] // nm) + x.shape[1:])
+
+    mb = jax.tree_util.tree_map(split, batch)
+    # accumulate in fp32 unless the model trains in pure-bf16 params (1T-scale
+    # memory budget; see configs/kimi_k2_1t.py)
+    all_bf16 = all(l.dtype == jnp.bfloat16
+                   for l in jax.tree_util.tree_leaves(params)
+                   if jnp.issubdtype(l.dtype, jnp.floating))
+    acc_dt = jnp.bfloat16 if all_bf16 else jnp.float32
+    zero = jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, acc_dt), params)
+
+    def acc(carry, mbatch):
+        lsum, gsum = carry
+        l, g = jax.value_and_grad(model.loss)(params, mbatch)
+        g = mod.constrain_tree(g, specs)
+        gsum = jax.tree_util.tree_map(
+            lambda a, b: a + b.astype(a.dtype), gsum, g)
+        return (lsum + l, mod.constrain_tree(gsum, specs)), None
+
+    (loss, grads), _ = jax.lax.scan(acc, (jnp.zeros((), jnp.float32), zero), mb)
+    inv = 1.0 / nm
+    grads = jax.tree_util.tree_map(lambda g: g * inv, grads)
+    return loss * inv, grads
+
+
+def make_train_step(model, optimizer: Optimizer, plan: Plan, run: RunConfig):
+    """Standard GSPMD train step (paper-faithful baseline distribution)."""
+    nm = max(run.microbatches, 1)
+
+    def train_step(params, opt_state, batch):
+        with use_plan(plan):
+            loss, grads = _loss_and_grads(model, params, batch, nm)
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    return train_step
+
+
+def make_train_step_proteus(model, optimizer: Optimizer, plan: Plan,
+                            run: RunConfig, pod_axis: str = "pod"):
+    """Proteus train step: quantized cross-pod gradient reduction.
+
+    Requires a multi-pod mesh; params are replicated across pods (pure DP on
+    the pod axis), batch is pod-split. Inside the shard_map the 'data' and
+    'model' axes remain auto (GSPMD), so intra-pod distribution is unchanged;
+    only the slow inter-pod hop carries int8 payloads.
+    """
+    mesh = plan.mesh
+    assert mesh is not None and pod_axis in mesh.shape, "needs a pod axis"
+    n_pods = mesh.shape[pod_axis]
+    # plan whose rules never touch the manual pod axis
+    inner_rules = {
+        k: (tuple(a for a in v if a != pod_axis) or None) if v else v
+        for k, v in plan.rules.items()
+    }
+    inner_plan = Plan(rules=inner_rules, mesh=mesh, cfg=plan.cfg,
+                      shape=plan.shape, notes=plan.notes + ("proteus-inner",))
+
+    nm = max(run.microbatches, 1)
+
+    def per_pod(params, opt_state, batch):
+        with use_plan(inner_plan):
+            loss, grads = _loss_and_grads(model, params, batch, nm)
+        grads = proteus.cross_pod_psum(
+            grads, pod_axis, bits=run.proteus_grad_bits,
+            block=run.proteus_block, mean=True, n_pods=n_pods)
+        loss = jax.lax.pmean(loss, pod_axis)
+        with use_plan(inner_plan):
+            new_params, new_opt = optimizer.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss}
+
+    def pod_spec_tree(tree, leading_pod: bool):
+        return jax.tree_util.tree_map(
+            lambda _: P(pod_axis) if leading_pod else P(), tree)
+
+    def train_step(params, opt_state, batch):
+        fn = shard_map(
+            per_pod, mesh=mesh,
+            in_specs=(pod_spec_tree(params, False),
+                      pod_spec_tree(opt_state, False),
+                      pod_spec_tree(batch, True)),
+            out_specs=(pod_spec_tree(params, False),
+                       pod_spec_tree(opt_state, False), {"loss": P()}),
+            check_vma=False,
+            axis_names=frozenset({pod_axis}))   # partial-manual: data/model stay auto
+        return fn(params, opt_state, batch)
+
+    return train_step
+
+
+# ---------------------------------------------------------------------------
+# Serve
+# ---------------------------------------------------------------------------
+def make_prefill_step(model, plan: Plan):
+    def prefill_step(params, batch):
+        with use_plan(plan):
+            return model.prefill(params, batch)
+    return prefill_step
+
+
+def make_decode_step(model, plan: Plan):
+    def decode_step(params, cache, tokens):
+        with use_plan(plan):
+            return model.decode_step(params, cache, tokens)
+    return decode_step
+
+
+# ---------------------------------------------------------------------------
+# Assembly for one cell: abstract inputs + shardings (dry-run / launcher)
+# ---------------------------------------------------------------------------
+def cell_artifacts(cfg: ModelConfig, shape: ShapeConfig, plan: Plan,
+                   run: RunConfig, optimizer_name: Optional[str] = None):
+    """Returns (model, step_fn, abstract_args, in_shardings, donate, run)."""
+    from repro.models import build_model
+    from repro.optim import make_optimizer
+
+    model = build_model(cfg)
+    pspecs = mod.param_pspecs(model.param_specs(), plan)
+    abstract_p = mod.abstract_params(model.param_specs())
+    batch = specs_lib.input_specs(cfg, shape)
+    batch_ps = specs_lib.batch_pspecs(cfg, shape, plan)
+
+    if shape.mode == "train":
+        if run.microbatches == 0:
+            run = run.replace(microbatches=auto_microbatches(cfg, shape, plan))
+        opt = make_optimizer(optimizer_name or cfg.optimizer, run)
+        ostate_specs = opt.state_specs(model.param_specs())
+        abstract_o = mod.abstract_params(ostate_specs)
+        opt_ps = mod.param_pspecs(ostate_specs, plan)
+        if run.proteus_enabled and plan.mesh is not None and \
+                "pod" in plan.mesh.shape:
+            step = make_train_step_proteus(model, opt, plan, run)
+        else:
+            step = make_train_step(model, opt, plan, run)
+        args = (abstract_p, abstract_o, batch)
+        shardings = (named(plan, pspecs), named(plan, opt_ps),
+                     named(plan, batch_ps))
+        return model, step, args, shardings, (0, 1), run, None
+
+    if shape.mode == "prefill":
+        step = make_prefill_step(model, plan)
+        args = (abstract_p, batch)
+        shardings = (named(plan, pspecs), named(plan, batch_ps))
+        # pin the returned cache to the serving cache layout (otherwise the
+        # scan ys inherit activation sharding and the cache lands 16x fatter)
+        cache_out = named(plan, specs_lib.cache_pspecs(model, plan, shape))
+        out_sh = (None, cache_out)
+        return model, step, args, shardings, (), run, out_sh
+
+    # decode
+    step = make_decode_step(model, plan)
+    cache = specs_lib.cache_specs(model, shape)
+    cache_ps = specs_lib.cache_pspecs(model, plan, shape)
+    args = (abstract_p, cache, batch["tokens"])
+    shardings = (named(plan, pspecs), named(plan, cache_ps),
+                 NamedSharding(plan.mesh, batch_ps["tokens"])
+                 if plan.mesh is not None else None)
+    out_sh = (None, named(plan, cache_ps))
+    return model, step, args, shardings, (1,), run, out_sh

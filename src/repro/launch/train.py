@@ -1,0 +1,127 @@
+"""Training driver: end-to-end loop with checkpointing + fault tolerance.
+
+Runs real training on whatever devices exist (CPU smoke configs, TPU slices)
+using the same planner/step machinery the dry-run proves out at 512 chips.
+
+  PYTHONPATH=src python -m repro.launch.train --arch pimref-100m --steps 200
+  PYTHONPATH=src python -m repro.launch.train --arch xlstm-125m --smoke \
+      --steps 50 --checkpoint-dir /tmp/ck --resume
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import (ALL_IDS, RunConfig, SHAPES_BY_NAME, ShapeConfig,
+                           get_config)
+from repro.core.mimdram import plan_sharding, use_plan
+from repro.data import make_batch_fn
+from repro.distributed import (PreemptionHandler, RestartManifest,
+                               StragglerMonitor)
+from repro.launch import mesh as mesh_lib
+from repro.launch.steps import make_train_step
+from repro.models import build_model, init_params
+from repro.models import module as mod
+from repro.optim import make_optimizer
+
+
+def train(arch: str, *, smoke: bool = True, steps: int = 100,
+          batch: int = 8, seq: int = 128, run: Optional[RunConfig] = None,
+          checkpoint_dir: str = "", resume: bool = False,
+          log_every: int = 10, use_mesh: bool = True,
+          proteus: bool = False) -> Dict[str, Any]:
+    cfg = get_config(arch, smoke=smoke)
+    run = run or RunConfig(total_steps=steps, microbatches=1)
+    shape = ShapeConfig("custom", seq_len=seq, global_batch=batch, mode="train")
+
+    mesh = mesh_lib.make_local_mesh(("data",)) if use_mesh else None
+    plan = plan_sharding(cfg, shape, mesh)
+    model = build_model(cfg)
+    optimizer = make_optimizer(cfg.optimizer, run)
+
+    key = jax.random.PRNGKey(run.seed)
+    with use_plan(plan):
+        params = init_params(model.param_specs(), key)
+        opt_state = optimizer.init(params)
+
+    step_fn = jax.jit(make_train_step(model, optimizer, plan, run),
+                      donate_argnums=(0, 1))
+    batch_fn = make_batch_fn(cfg, shape, seed=run.seed)
+
+    start = 0
+    ckpt = CheckpointManager(checkpoint_dir, keep=run.keep_checkpoints) \
+        if checkpoint_dir else None
+    if ckpt and resume and ckpt.latest_step() is not None:
+        start, state = ckpt.restore({"params": params, "opt": opt_state})
+        params, opt_state = state["params"], state["opt"]
+        print(f"resumed from step {start}")
+
+    preempt = PreemptionHandler().install()
+    straggler = StragglerMonitor()
+    losses = []
+    t_begin = time.time()
+    for step in range(start, steps):
+        straggler.step_start()
+        b = {k: jnp.asarray(v) for k, v in batch_fn(step).items()}
+        params, opt_state, metrics = step_fn(params, opt_state, b)
+        loss = float(metrics["loss"])
+        losses.append(loss)
+        flag = straggler.step_end(step)
+        if flag:
+            print(f"  straggler flag: {flag}")
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t_begin
+            print(f"step {step:5d} loss {loss:8.4f} "
+                  f"({dt / max(step - start + 1, 1):.2f}s/step)")
+        if ckpt and ((step + 1) % run.checkpoint_every == 0
+                     or preempt.requested or step == steps - 1):
+            ckpt.save(step + 1, {"params": params, "opt": opt_state},
+                      extra={"loss": loss})
+            RestartManifest(
+                step=step + 1, checkpoint_dir=checkpoint_dir,
+                mesh_shape=list(mesh.shape.values()) if mesh else [1],
+                mesh_axes=list(mesh.shape.keys()) if mesh else ["data"],
+                data_seed=run.seed, arch=arch, shape=shape.name,
+                straggler_events=straggler.flagged,
+            ).save(os.path.join(checkpoint_dir, "manifest.json"))
+            if preempt.requested:
+                print(f"preemption requested: checkpointed at {step + 1}, "
+                      "exiting cleanly")
+                break
+    preempt.uninstall()
+    if ckpt:
+        ckpt.wait()
+    return {"losses": losses, "final_loss": losses[-1] if losses else None,
+            "params": params, "opt_state": opt_state}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="pimref-100m", choices=list(ALL_IDS))
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=128)
+    ap.add_argument("--smoke", action="store_true", default=True)
+    ap.add_argument("--full", dest="smoke", action="store_false")
+    ap.add_argument("--checkpoint-dir", default="")
+    ap.add_argument("--resume", action="store_true")
+    ap.add_argument("--lr", type=float, default=3e-4)
+    args = ap.parse_args()
+    run = RunConfig(total_steps=args.steps, learning_rate=args.lr,
+                    microbatches=1)
+    out = train(args.arch, smoke=args.smoke, steps=args.steps,
+                batch=args.batch, seq=args.seq, run=run,
+                checkpoint_dir=args.checkpoint_dir, resume=args.resume)
+    print(f"final loss: {out['final_loss']:.4f}")
+
+
+if __name__ == "__main__":
+    main()

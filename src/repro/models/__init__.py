@@ -1,0 +1,13 @@
+from repro.models.model import TransformerLM, build_model
+from repro.models.module import (abstract_params, count_params, init_params,
+                                 param_bytes, param_pspecs)
+
+__all__ = [
+    "build_model",
+    "TransformerLM",
+    "init_params",
+    "abstract_params",
+    "param_pspecs",
+    "count_params",
+    "param_bytes",
+]

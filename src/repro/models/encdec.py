@@ -1,0 +1,228 @@
+"""Encoder-decoder LM (seamless-m4t-large-v2 backbone).
+
+The audio modality frontend is a STUB: the encoder consumes precomputed frame
+embeddings (batch, src_len, d_model) supplied by ``input_specs()`` — per the
+assignment rules. The text decoder has causal self-attention + cross-attention
+and a KV-cache decode path.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mimdram import constrain
+from repro.models import module as mod
+from repro.models.layers import (chunked_attention, dense, gated_mlp, rms_norm,
+                                 rope, softmax_xent)
+from repro.models.model import attn_param_specs, mlp_param_specs, qkv
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+class EncDecLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dt(cfg.param_dtype)
+        self.cdtype = _dt(cfg.compute_dtype)
+
+    # -- specs ----------------------------------------------------------------
+    def _enc_layer(self):
+        cfg = self.cfg
+        return {
+            "ln1": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "attn": attn_param_specs(cfg, self.dtype),
+            "ln2": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "mlp": mlp_param_specs(cfg, self.dtype),
+        }
+
+    def _dec_layer(self):
+        cfg = self.cfg
+        return {
+            "ln1": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "self_attn": attn_param_specs(cfg, self.dtype),
+            "ln_x": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "cross_attn": attn_param_specs(cfg, self.dtype),
+            "ln2": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "mlp": mlp_param_specs(cfg, self.dtype),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        return {
+            "embed": mod.spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              self.dtype),
+            "enc_blocks": mod.stack_tree(self._enc_layer(),
+                                         cfg.num_encoder_layers),
+            "enc_norm": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "dec_blocks": mod.stack_tree(self._dec_layer(), cfg.num_layers),
+            "final_norm": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "head": mod.spec((cfg.d_model, cfg.vocab_size), ("embed", "vocab"),
+                             self.dtype),
+        }
+
+    # -- encoder ----------------------------------------------------------------
+    def encode(self, params, src_embeds: jax.Array) -> jax.Array:
+        cfg = self.cfg
+        x = src_embeds.astype(self.cdtype)
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        S = x.shape[1]
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        def body(carry, p):
+            h = jax.lax.optimization_barrier(carry)
+            p = mod.constrain_tree(p, self._enc_layer())
+            xn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            q, k, v = qkv(cfg, p["attn"], xn, positions)
+            o = chunked_attention(q, k, v, causal=False, q_offset=0)
+            h = h + dense(o, p["attn"]["w_o"], "bshe,hed->bsd")
+            h = h + gated_mlp(rms_norm(h, p["ln2"], cfg.norm_eps),
+                              p["mlp"]["wi_gate"], p["mlp"]["wi_up"],
+                              p["mlp"]["wo"])
+            return constrain(h, "act_batch", "act_seq", "act_embed"), None
+
+        fn = body
+        if cfg.remat != "none":
+            fn = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(fn, x, params["enc_blocks"])
+        return rms_norm(x, params["enc_norm"], cfg.norm_eps)
+
+    # -- decoder (teacher-forced) -------------------------------------------------
+    def _dec_block(self, p, h, enc_out, positions):
+        cfg = self.cfg
+        xn = rms_norm(h, p["ln1"], cfg.norm_eps)
+        q, k, v = qkv(cfg, p["self_attn"], xn, positions)
+        o = chunked_attention(q, k, v, causal=True, q_offset=0)
+        h = h + dense(o, p["self_attn"]["w_o"], "bshe,hed->bsd")
+        # cross attention (no RoPE)
+        xn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+        qx = dense(xn, p["cross_attn"]["w_q"], "bsd,dhe->bshe")
+        kx = dense(enc_out, p["cross_attn"]["w_k"], "bsd,dhe->bshe")
+        vx = dense(enc_out, p["cross_attn"]["w_v"], "bsd,dhe->bshe")
+        ox = chunked_attention(qx, kx, vx, causal=False, q_offset=0)
+        h = h + dense(ox, p["cross_attn"]["w_o"], "bshe,hed->bsd")
+        h = h + gated_mlp(rms_norm(h, p["ln2"], cfg.norm_eps),
+                          p["mlp"]["wi_gate"], p["mlp"]["wi_up"], p["mlp"]["wo"])
+        return constrain(h, "act_batch", "act_seq", "act_embed")
+
+    def forward(self, params, src_embeds, tokens):
+        cfg = self.cfg
+        enc_out = self.encode(params, src_embeds)
+        x = params["embed"].astype(self.cdtype)[tokens]
+        positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
+
+        def body(carry, p):
+            carry = jax.lax.optimization_barrier(carry)
+            p = mod.constrain_tree(p, self._dec_layer())
+            return self._dec_block(p, carry, enc_out, positions), None
+
+        fn = body
+        if cfg.remat != "none":
+            fn = jax.checkpoint(body, prevent_cse=False)
+        x, _ = jax.lax.scan(fn, x, params["dec_blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return dense(x, params["head"], "bsd,dv->bsv")
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["src_embeds"], batch["tokens"])
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:],
+                            batch.get("loss_mask"))
+
+    # -- serving ---------------------------------------------------------------
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        L = cfg.num_layers
+        dh = cfg.resolved_head_dim
+        src = int(max_len * cfg.src_len_ratio)
+        kv = (batch, max_len, cfg.num_kv_heads, dh)
+        xkv = (batch, src, cfg.num_kv_heads, dh)
+        return {
+            "k": jnp.zeros((L,) + kv, self.cdtype),
+            "v": jnp.zeros((L,) + kv, self.cdtype),
+            "xk": jnp.zeros((L,) + xkv, self.cdtype),
+            "xv": jnp.zeros((L,) + xkv, self.cdtype),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_logical_axes(self):
+        kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ()}
+
+    def prefill(self, params, batch):
+        """Encode source + run decoder over the token prefix, build caches."""
+        cfg = self.cfg
+        enc_out = self.encode(params, batch["src_embeds"])
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        x = params["embed"].astype(self.cdtype)[tokens]
+        positions = jnp.arange(S, dtype=jnp.int32)
+
+        def body(carry, p):
+            h = carry
+            p = mod.constrain_tree(p, self._dec_layer())
+            xn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            q, k, v = qkv(cfg, p["self_attn"], xn, positions)
+            o = chunked_attention(q, k, v, causal=True, q_offset=0)
+            h = h + dense(o, p["self_attn"]["w_o"], "bshe,hed->bsd")
+            xn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            qx = dense(xn, p["cross_attn"]["w_q"], "bsd,dhe->bshe")
+            kx = dense(enc_out, p["cross_attn"]["w_k"], "bsd,dhe->bshe")
+            vx = dense(enc_out, p["cross_attn"]["w_v"], "bsd,dhe->bshe")
+            ox = chunked_attention(qx, kx, vx, causal=False, q_offset=0)
+            h = h + dense(ox, p["cross_attn"]["w_o"], "bshe,hed->bsd")
+            h = h + gated_mlp(rms_norm(h, p["ln2"], cfg.norm_eps),
+                              p["mlp"]["wi_gate"], p["mlp"]["wi_up"],
+                              p["mlp"]["wo"])
+            return h, (k.astype(self.cdtype), v.astype(self.cdtype),
+                       kx.astype(self.cdtype), vx.astype(self.cdtype))
+
+        x, (ck, cv, cxk, cxv) = jax.lax.scan(body, x, params["dec_blocks"])
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x[:, -1:], params["head"], "bsd,dv->bsv")
+        cache = {"k": ck, "v": cv, "xk": cxk, "xv": cxv,
+                 "pos": jnp.array(S, jnp.int32)}
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]
+        pos = cache["pos"]
+        positions = pos[None].astype(jnp.int32)
+        T = cache["k"].shape[2]
+
+        def body(carry, xs):
+            h = carry
+            p, ck, cv, xk, xv = xs
+            p = mod.constrain_tree(p, self._dec_layer())
+            xn = rms_norm(h, p["ln1"], cfg.norm_eps)
+            q, k, v = qkv(cfg, p["self_attn"], xn, positions)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, pos, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, pos, 0, 0))
+            o = chunked_attention(q, ck.astype(h.dtype), cv.astype(h.dtype),
+                                  causal=True, q_offset=pos,
+                                  kv_valid_len=pos + 1, chunk_kv=min(1024, T))
+            h = h + dense(o, p["self_attn"]["w_o"], "bshe,hed->bsd")
+            xn = rms_norm(h, p["ln_x"], cfg.norm_eps)
+            qx = dense(xn, p["cross_attn"]["w_q"], "bsd,dhe->bshe")
+            ox = chunked_attention(qx, xk.astype(h.dtype), xv.astype(h.dtype),
+                                   causal=False, q_offset=0)
+            h = h + dense(ox, p["cross_attn"]["w_o"], "bshe,hed->bsd")
+            h = h + gated_mlp(rms_norm(h, p["ln2"], cfg.norm_eps),
+                              p["mlp"]["wi_gate"], p["mlp"]["wi_up"],
+                              p["mlp"]["wo"])
+            return h, (ck, cv)
+
+        x, (ck, cv) = jax.lax.scan(
+            body, x,
+            (params["dec_blocks"], cache["k"], cache["v"], cache["xk"],
+             cache["xv"]))
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x, params["head"], "bsd,dv->bsv")
+        new_cache = dict(cache, k=ck, v=cv, pos=pos + 1)
+        return logits, new_cache

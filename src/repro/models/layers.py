@@ -1,0 +1,423 @@
+"""Shared layers: RMSNorm, RoPE, gated MLP, chunked online-softmax attention.
+
+Attention is implemented *chunked* (flash-attention structure in pure jnp):
+the working set per step is one (q-chunk x kv-chunk) tile — the HBM->VMEM
+data-movement-minimization analogue of processing-using-memory, and the
+reference oracle for ``repro.kernels.flash_attention``.
+"""
+from __future__ import annotations
+
+import math
+from functools import partial
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.mimdram import constrain
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# Basic ops
+# ---------------------------------------------------------------------------
+def rms_norm(x: jax.Array, scale: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps) * scale.astype(jnp.float32)
+    return y.astype(dt)
+
+
+def dense(x: jax.Array, w: jax.Array, subscripts: str) -> jax.Array:
+    """einsum in compute dtype with fp32 accumulation."""
+    y = jnp.einsum(subscripts, x, w.astype(x.dtype),
+                   preferred_element_type=jnp.float32)
+    return y.astype(x.dtype)
+
+
+def gated_mlp(x: jax.Array, wi_gate: jax.Array, wi_up: jax.Array,
+              wo: jax.Array) -> jax.Array:
+    """SwiGLU MLP: (silu(x W_g) * x W_u) W_o; activations TP-sharded on d_ff."""
+    g = dense(x, wi_gate, "bsd,df->bsf")
+    u = dense(x, wi_up, "bsd,df->bsf")
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "act_batch", "act_seq", "act_ff")
+    return dense(h, wo, "bsf,fd->bsd")
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float = 10_000.0) -> jax.Array:
+    """Rotary embedding. x: (..., S, H, D); positions: (S,) or (B, S)."""
+    d = x.shape[-1]
+    half = d // 2
+    freq = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions[..., None].astype(jnp.float32) * freq  # (..., S, half)
+    # broadcast to (..., S, 1, half) over heads
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    y1 = x1 * cos - x2 * sin
+    y2 = x2 * cos + x1 * sin
+    return jnp.concatenate([y1, y2], axis=-1).astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)
+
+
+# ---------------------------------------------------------------------------
+# Chunked online-softmax attention (GQA, causal / sliding-window / cross)
+# ---------------------------------------------------------------------------
+def _attn_tile(qc, kc, vc, mask, m, l, acc, scale, cap):
+    """One (q-tile, kv-tile) online-softmax update.
+
+    qc: (B, Cq, K, G, D)   kc/vc: (B, Ck, K, D)   mask: (Cq, Ck) bool
+    m, l: (B, K, G, Cq)    acc: (B, Cq, K, G, D)
+    """
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
+                   preferred_element_type=jnp.float32) * scale
+    if cap > 0:
+        s = softcap(s, cap)
+    s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    m_new = jnp.maximum(m, s.max(axis=-1))
+    # guard fully-masked tiles: exp(NEG_INF - NEG_INF) would be 1
+    safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - safe_m[..., None])
+    p = jnp.where(mask[None, None, None, :, :], p, 0.0)
+    alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - safe_m))
+    l_new = l * alpha + p.sum(axis=-1)
+    pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vc.dtype), vc,
+                    preferred_element_type=jnp.float32)
+    acc_new = acc * alpha.transpose(0, 3, 1, 2)[..., None] + pv
+    return m_new, l_new, acc_new
+
+
+def chunked_attention(
+    q: jax.Array,                 # (B, S, Hq, D)
+    k: jax.Array,                 # (B, T, Hkv, D)
+    v: jax.Array,                 # (B, T, Hkv, D)
+    *,
+    causal: bool = True,
+    window: int = 0,              # >0: sliding-window attention
+    q_offset: Any = 0,            # absolute position of q[0] (int or traced)
+    kv_positions: Optional[jax.Array] = None,  # (T,) absolute pos (ring caches)
+    kv_valid_len: Any = None,     # mask kv positions >= this (decode caches)
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+    attn_softcap: float = 0.0,
+    block_skip: bool = False,     # beyond-paper: skip fully-masked kv tiles
+) -> jax.Array:
+    """Tiled attention with online softmax; O(Cq*Ck) live scores memory."""
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = 1.0 / math.sqrt(D)
+    cq = min(chunk_q, S)
+    ck = min(chunk_kv, T)
+    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
+    nq, nk = S // cq, T // ck
+
+    # training/prefill path: flash custom-VJP (O(S) activation memory)
+    if (kv_positions is None and kv_valid_len is None and S > 1
+            and isinstance(q_offset, int) and q_offset == 0):
+        qg = q.reshape(B, S, Hkv, G, D)
+        out = flash_attention_jnp(qg, k, v, causal, window, attn_softcap,
+                                  cq, ck, block_skip)
+        return out.reshape(B, S, Hq, D)
+
+    qg = q.reshape(B, nq, cq, Hkv, G, D)
+    kg = k.reshape(B, nk, ck, Hkv, D)
+    vg = v.reshape(B, nk, ck, Hkv, D)
+    if kv_positions is None:
+        kv_pos = jnp.arange(T, dtype=jnp.int32).reshape(nk, ck)
+    else:
+        kv_pos = kv_positions.astype(jnp.int32).reshape(nk, ck)
+
+    def q_chunk(i):
+        qc = qg[:, i].astype(jnp.float32)  # fp32 q tile for stable softmax
+        q_pos = q_offset + i * cq + jnp.arange(cq, dtype=jnp.int32)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            kc = kg[:, j]
+            vc = vg[:, j]
+            kp = kv_pos[j]
+            mask = jnp.ones((cq, ck), dtype=bool)
+            mask &= kp[None, :] >= 0
+            if causal:
+                mask &= kp[None, :] <= q_pos[:, None]
+            if window > 0:
+                mask &= kp[None, :] > q_pos[:, None] - window
+            if kv_valid_len is not None:
+                mask &= kp[None, :] < kv_valid_len
+            m, l, acc = _attn_tile(qc.astype(k.dtype), kc, vc, mask, m, l, acc,
+                                   scale, attn_softcap)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, Hkv, G, D), jnp.float32)
+
+        if block_skip and causal and kv_positions is None and kv_valid_len is None:
+            # beyond-paper optimization: statically bound the kv range per
+            # q-tile; tiles wholly above the causal diagonal are never built.
+            hi = 0
+            if isinstance(q_offset, int):
+                hi = (q_offset + (i + 1) * cq + ck - 1) // ck
+                lo = 0
+                if window > 0:
+                    lo = max(0, (q_offset + i * cq - window) // ck)
+                idx = jnp.arange(lo, max(hi, lo + 1), dtype=jnp.int32)
+                (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0), idx)
+            else:
+                (m, l, acc), _ = jax.lax.scan(
+                    kv_step, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32))
+        else:
+            (m, l, acc), _ = jax.lax.scan(
+                kv_step, (m0, l0, a0), jnp.arange(nk, dtype=jnp.int32))
+        l = jnp.where(l == 0.0, 1.0, l)
+        out = acc / l.transpose(0, 3, 1, 2)[..., None]
+        return out.astype(q.dtype)  # (B, cq, Hkv, G, D)
+
+    if nq == 1:
+        out = q_chunk(0)
+        return out.reshape(B, S, Hq, D)
+    outs = jax.lax.map(q_chunk, jnp.arange(nq, dtype=jnp.int32))  # (nq,B,cq,...)
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, D)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Flash attention with custom VJP (recompute-from-lse backward).
+#
+# The default autodiff of the chunked forward saves the fp32 (m, l, acc)
+# carries of every kv step — O(S*T/ck) live fp32 — which DAMOV flagged as the
+# dominant train-time memory term. The flash backward stores only (out, lse)
+# and rebuilds p per tile: activation memory drops to O(S) per layer.
+# ---------------------------------------------------------------------------
+def _kv_range(i, cq, ck, T, causal, window, block_skip):
+    """Static kv-chunk range [lo, hi) that q-chunk i can attend to."""
+    nk = T // ck
+    if not block_skip:
+        return 0, nk
+    hi = min(nk, (i * cq + cq + ck - 1) // ck) if causal else nk
+    lo = max(0, (i * cq - window) // ck) if window > 0 else 0
+    return lo, max(hi, lo + 1)
+
+
+def _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
+                    block_skip=False):
+    """Returns (out, lse). q:(B,S,Hkv,G,D) k/v:(B,T,Hkv,D).
+
+    block_skip=True (beyond-paper): q-chunks are Python-unrolled so each
+    scans only its statically-reachable kv chunks — causal attention does
+    ~(nq+1)/2nq of the full-pair work in both FLOPs and tile traffic.
+    """
+    B, S, Hkv, G, D = q.shape
+    T = k.shape[1]
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, nq, cq, Hkv, G, D)
+    kg = k.reshape(B, nk, ck, Hkv, D)
+    vg = v.reshape(B, nk, ck, Hkv, D)
+
+    def q_chunk(i, lo=0, hi=nk):
+        qc = qg[:, i]
+        q_pos = i * cq + jnp.arange(cq, dtype=jnp.int32)
+
+        def kv_step(carry, j):
+            m, l, acc = carry
+            mask = _flash_mask(q_pos, j, ck, causal, window)
+            m, l, acc = _attn_tile(qc, kg[:, j], vg[:, j], mask, m, l, acc,
+                                   scale, attn_softcap)
+            return (m, l, acc), None
+
+        m0 = jnp.full((B, Hkv, G, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, G, cq), jnp.float32)
+        a0 = jnp.zeros((B, cq, Hkv, G, D), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(kv_step, (m0, l0, a0),
+                                      jnp.arange(lo, hi, dtype=jnp.int32))
+        lsafe = jnp.where(l == 0.0, 1.0, l)
+        out = (acc / lsafe.transpose(0, 3, 1, 2)[..., None]).astype(q.dtype)
+        lse = jnp.where(m <= NEG_INF / 2, NEG_INF, m + jnp.log(lsafe))
+        return out, lse                          # (B,cq,K,G,D), (B,K,G,cq)
+
+    if nq == 1:
+        out, lse = q_chunk(0, *_kv_range(0, cq, ck, T, causal, window,
+                                         block_skip))
+        return out.reshape(B, S, Hkv, G, D), lse[..., None, :]
+    if block_skip:
+        outs, lses = [], []
+        for i in range(nq):
+            lo, hi = _kv_range(i, cq, ck, T, causal, window, True)
+            o, l = q_chunk(i, lo, hi)
+            outs.append(o)
+            lses.append(l)
+        out = jnp.stack(outs, 1).reshape(B, S, Hkv, G, D)
+        lse = jnp.stack(lses, 3)
+        return out, lse
+    outs, lses = jax.lax.map(q_chunk, jnp.arange(nq, dtype=jnp.int32))
+    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hkv, G, D)
+    lse = jnp.moveaxis(lses, 0, 3)               # (B,K,G,nq,cq)
+    return out, lse
+
+
+def _flash_mask(q_pos, j, ck, causal, window):
+    k_pos = j * ck + jnp.arange(ck, dtype=jnp.int32)
+    mask = jnp.ones((q_pos.shape[0], ck), bool)
+    if causal:
+        mask &= k_pos[None, :] <= q_pos[:, None]
+    if window > 0:
+        mask &= k_pos[None, :] > q_pos[:, None] - window
+    return mask
+
+
+def _flash_tile_scores(qc, kc, scale, cap):
+    s_raw = jnp.einsum("bqkgd,bskd->bkgqs", qc.astype(jnp.float32),
+                       kc.astype(jnp.float32)) * scale
+    if cap > 0:
+        return cap * jnp.tanh(s_raw / cap), s_raw
+    return s_raw, s_raw
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+def flash_attention_jnp(q, k, v, causal=True, window=0, attn_softcap=0.0,
+                        cq=512, ck=1024, block_skip=False):
+    out, _ = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
+                             block_skip)
+    return out
+
+
+def _flash_vjp_fwd(q, k, v, causal, window, attn_softcap, cq, ck, block_skip):
+    out, lse = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
+                               block_skip)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_vjp_bwd(causal, window, attn_softcap, cq, ck, block_skip, res, do):
+    q, k, v, out, lse = res
+    B, S, Hkv, G, D = q.shape
+    T = k.shape[1]
+    nq, nk = S // cq, T // ck
+    scale = 1.0 / math.sqrt(D)
+    qg = q.reshape(B, nq, cq, Hkv, G, D)
+    kg = k.reshape(B, nk, ck, Hkv, D)
+    vg = v.reshape(B, nk, ck, Hkv, D)
+    og = out.reshape(B, nq, cq, Hkv, G, D)
+    dog = do.reshape(B, nq, cq, Hkv, G, D)
+    # delta = rowsum(do * o): (B,nq,cq,K,G) -> align to scores (B,K,G,cq)
+    delta = (dog.astype(jnp.float32) * og.astype(jnp.float32)).sum(-1)
+
+    def q_chunk(i, carry, lo=0, hi=nk):
+        dk_acc, dv_acc = carry
+        qc = qg[:, i]
+        doc = dog[:, i].astype(jnp.float32)
+        lse_i = lse[:, :, :, i]                                # (B,K,G,cq)
+        dlt_i = delta[:, i].transpose(0, 2, 3, 1)              # (B,K,G,cq)
+        q_pos = i * cq + jnp.arange(cq, dtype=jnp.int32)
+
+        def kv_step(carry2, j):
+            dq_c, dk_a, dv_a = carry2
+            kc, vc = kg[:, j], vg[:, j]
+            mask = _flash_mask(q_pos, j, ck, causal, window)
+            s, s_raw = _flash_tile_scores(qc, kc, scale, attn_softcap)
+            s = jnp.where(mask[None, None, None], s, NEG_INF)
+            p = jnp.exp(s - lse_i[..., None])                  # (B,K,G,q,s)
+            p = jnp.where(mask[None, None, None], p, 0.0)
+            dv_t = jnp.einsum("bkgqs,bqkgd->bskd", p, doc)
+            dp = jnp.einsum("bqkgd,bskd->bkgqs", doc,
+                            vc.astype(jnp.float32))
+            ds = p * (dp - dlt_i[..., None])
+            if attn_softcap > 0:
+                t = jnp.tanh(s_raw / attn_softcap)
+                ds = ds * (1.0 - t * t)
+            dq_t = jnp.einsum("bkgqs,bskd->bqkgd", ds,
+                              kc.astype(jnp.float32)) * scale
+            dk_t = jnp.einsum("bkgqs,bqkgd->bskd", ds,
+                              qc.astype(jnp.float32)) * scale
+            dk_a = jax.lax.dynamic_update_slice(
+                dk_a, (jax.lax.dynamic_slice(
+                    dk_a, (0, j * ck, 0, 0), (B, ck, Hkv, D)) + dk_t),
+                (0, j * ck, 0, 0))
+            dv_a = jax.lax.dynamic_update_slice(
+                dv_a, (jax.lax.dynamic_slice(
+                    dv_a, (0, j * ck, 0, 0), (B, ck, Hkv, D)) + dv_t),
+                (0, j * ck, 0, 0))
+            return (dq_c + dq_t, dk_a, dv_a), None
+
+        dq0 = jnp.zeros((B, cq, Hkv, G, D), jnp.float32)
+        (dq_c, dk_acc, dv_acc), _ = jax.lax.scan(
+            kv_step, (dq0, dk_acc, dv_acc),
+            jnp.arange(lo, hi, dtype=jnp.int32))
+        return dq_c, (dk_acc, dv_acc)
+
+    dkv0 = (jnp.zeros((B, T, Hkv, D), jnp.float32),
+            jnp.zeros((B, T, Hkv, D), jnp.float32))
+
+    if block_skip:
+        carry = dkv0
+        dq_chunks = []
+        for i in range(nq):
+            lo, hi = _kv_range(i, cq, ck, T, causal, window, True)
+            dq_c, carry = q_chunk(i, carry, lo, hi)
+            dq_chunks.append(dq_c)
+        dk, dv = carry
+        dq = jnp.stack(dq_chunks, 1).reshape(B, S, Hkv, G, D)
+        return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+    def scan_q(carry, i):
+        dq_c, carry = q_chunk(i, carry)
+        return carry, dq_c
+
+    (dk, dv), dqs = jax.lax.scan(scan_q, dkv0,
+                                 jnp.arange(nq, dtype=jnp.int32))
+    dq = jnp.moveaxis(dqs, 0, 1).reshape(B, S, Hkv, G, D)
+    return (dq.astype(q.dtype), dk.astype(k.dtype), dv.astype(v.dtype))
+
+
+flash_attention_jnp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,
+                  kv_valid_len=None, attn_softcap=0.0):
+    """Naive quadratic oracle (tests only)."""
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    qf = q.reshape(B, S, Hkv, G, D).astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, k.astype(jnp.float32))
+    s = s / math.sqrt(D)
+    if attn_softcap > 0:
+        s = softcap(s, attn_softcap)
+    qp = q_offset + jnp.arange(S)
+    kp = jnp.arange(T)
+    mask = jnp.ones((S, T), bool)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        mask &= kp[None, :] > qp[:, None] - window
+    if kv_valid_len is not None:
+        mask &= kp[None, :] < kv_valid_len
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqs,bskd->bqkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, S, Hq, D).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Cross-entropy
+# ---------------------------------------------------------------------------
+def softmax_xent(logits: jax.Array, labels: jax.Array,
+                 mask: Optional[jax.Array] = None) -> jax.Array:
+    """Mean next-token cross-entropy. logits (B,S,V) fp-any; labels (B,S)."""
+    lf = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lf, axis=-1)
+    ll = jnp.take_along_axis(lf, labels[..., None], axis=-1)[..., 0]
+    nll = lse - ll
+    if mask is not None:
+        nll = nll * mask
+        return nll.sum() / jnp.maximum(mask.sum(), 1)
+    return nll.mean()

@@ -1,0 +1,323 @@
+"""Decoder-only transformer LM (dense / MoE / VLM families) + model dispatch.
+
+One homogeneous block stack, scanned (``jax.lax.scan``) over stacked params so
+HLO size and compile time are O(1) in depth; KV-cache decode path for
+serving. Hybrid (RG-LRU), SSM (xLSTM) and enc-dec (audio) families live in
+sibling modules and share the same Model protocol:
+
+    param_specs() -> spec pytree
+    loss(params, batch) -> scalar
+    prefill(params, batch) -> (last_logits, cache)
+    decode_step(params, cache, tokens) -> (logits, cache)
+    init_cache(batch, max_len) -> cache pytree
+"""
+from __future__ import annotations
+
+import dataclasses
+from functools import partial
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mimdram import constrain
+from repro.models import module as mod
+from repro.models.layers import (chunked_attention, dense, gated_mlp, rms_norm,
+                                 rope, softmax_xent)
+from repro.models.moe import moe_ffn, moe_param_specs
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ---------------------------------------------------------------------------
+# Shared block pieces
+# ---------------------------------------------------------------------------
+def attn_param_specs(cfg: ModelConfig, dtype) -> Dict[str, mod.ParamSpec]:
+    d, hq, hkv, dh = (cfg.d_model, cfg.tp_pad_heads or cfg.num_heads,
+                      cfg.num_kv_heads, cfg.resolved_head_dim)
+    return {
+        "w_q": mod.spec((d, hq, dh), ("embed", "heads", "head_dim"), dtype),
+        "w_k": mod.spec((d, hkv, dh), ("embed", "kv", "head_dim"), dtype),
+        "w_v": mod.spec((d, hkv, dh), ("embed", "kv", "head_dim"), dtype),
+        "w_o": mod.spec((hq, dh, d), ("heads", "head_dim", "embed"), dtype,
+                        ("normal", 0)),
+    }
+
+
+def mlp_param_specs(cfg: ModelConfig, dtype) -> Dict[str, mod.ParamSpec]:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "wi_gate": mod.spec((d, f), ("embed", "mlp"), dtype),
+        "wi_up": mod.spec((d, f), ("embed", "mlp"), dtype),
+        "wo": mod.spec((f, d), ("mlp", "embed"), dtype),
+    }
+
+
+def qkv(cfg: ModelConfig, p, xn: jax.Array, positions) -> Tuple[jax.Array, ...]:
+    q = dense(xn, p["w_q"], "bsd,dhe->bshe")
+    k = dense(xn, p["w_k"], "bsd,dhe->bshe")
+    v = dense(xn, p["w_v"], "bsd,dhe->bshe")
+    q = rope(q, positions, cfg.rope_theta)
+    k = rope(k, positions, cfg.rope_theta)
+    q = constrain(q, "act_batch", "act_seq", "act_heads", "act_hd")
+    k = constrain(k, "act_batch", "act_seq", "act_kv", "act_hd")
+    return q, k, v
+
+
+def attn_out(p, o: jax.Array) -> jax.Array:
+    return dense(o, p["w_o"], "bshe,hed->bsd")
+
+
+# ---------------------------------------------------------------------------
+# TransformerLM
+# ---------------------------------------------------------------------------
+class TransformerLM:
+    """dense / moe / vlm families."""
+
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dt(cfg.param_dtype)
+        self.cdtype = _dt(cfg.compute_dtype)
+
+    # -- specs ---------------------------------------------------------------
+    def block_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        s: Dict[str, Any] = {
+            "ln1": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "ln2": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "attn": attn_param_specs(cfg, self.dtype),
+        }
+        if cfg.num_experts > 0:
+            s["moe"] = moe_param_specs(cfg, self.dtype)
+        else:
+            s["mlp"] = mlp_param_specs(cfg, self.dtype)
+        return s
+
+    def param_specs(self) -> Dict[str, Any]:
+        cfg = self.cfg
+        specs: Dict[str, Any] = {
+            "embed": mod.spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              self.dtype),
+            "final_norm": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "blocks": mod.stack_tree(self.block_specs(), cfg.num_layers),
+        }
+        if not cfg.tie_embeddings:
+            specs["head"] = mod.spec((cfg.d_model, cfg.vocab_size),
+                                     ("embed", "vocab"), self.dtype)
+        return specs
+
+    # -- one block -----------------------------------------------------------
+    def _block(self, p, x, positions, *, window, block_skip=False):
+        cfg = self.cfg
+        # barrier: stops XLA promoting the scan-saved bf16 residual stack to
+        # f32 via convert motion (observed 2x activation memory otherwise)
+        x = jax.lax.optimization_barrier(x)
+        p = mod.constrain_tree(p, self.block_specs())
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        q, k, v = qkv(cfg, p["attn"], xn, positions)
+        o = chunked_attention(q, k, v, causal=True, window=window, q_offset=0,
+                              chunk_q=cfg.attn_chunk_q,
+                              chunk_kv=cfg.attn_chunk_kv,
+                              block_skip=cfg.attn_block_skip or block_skip)
+        x = x + dense(o, p["attn"]["w_o"], "bshe,hed->bsd")
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        xn2 = rms_norm(x, p["ln2"], cfg.norm_eps)
+        if cfg.num_experts > 0:
+            y = moe_ffn(cfg, p["moe"], xn2)
+        else:
+            y = gated_mlp(xn2, p["mlp"]["wi_gate"], p["mlp"]["wi_up"],
+                          p["mlp"]["wo"])
+        x = x + y
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        return x
+
+    # -- full-sequence forward (train / prefill) ------------------------------
+    def forward(self, params, tokens: jax.Array,
+                patch_embeds: Optional[jax.Array] = None):
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]
+        if patch_embeds is not None:
+            x = jnp.concatenate([patch_embeds.astype(self.cdtype), x], axis=1)
+        B, S, _ = x.shape
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+        positions = jnp.arange(S, dtype=jnp.int32)
+        window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
+
+        def body(carry, layer_p):
+            return self._block(layer_p, carry, positions, window=window), None
+
+        block_fn = body
+        if cfg.remat != "none":
+            block_fn = jax.checkpoint(body, prevent_cse=False)
+        if cfg.scan_layers:
+            x, _ = jax.lax.scan(block_fn, x, params["blocks"])
+        else:
+            for i in range(cfg.num_layers):
+                layer_p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                x, _ = block_fn(x, layer_p)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        logits = dense(x, head, "bsd,dv->bsv")
+        logits = constrain(logits, "act_batch", "act_seq", "act_vocab")
+        return logits
+
+    def loss(self, params, batch) -> jax.Array:
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        logits = self.forward(params, tokens, batch.get("patch_embeds"))
+        if "patch_embeds" in batch and batch["patch_embeds"] is not None:
+            # loss only over text region (after the patch prefix)
+            P = batch["patch_embeds"].shape[1]
+            logits = logits[:, P:]
+        labels = batch["labels"]
+        mask = batch.get("loss_mask")
+        return softmax_xent(logits[:, :-1], labels[:, 1:],
+                            None if mask is None else mask[:, 1:])
+
+    # -- serving ---------------------------------------------------------------
+    def cache_len(self, max_len: int) -> int:
+        cfg = self.cfg
+        if cfg.attention_kind == "sliding" and cfg.sliding_window > 0:
+            return min(max_len, cfg.sliding_window)
+        return max_len
+
+    def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
+        cfg = self.cfg
+        T = self.cache_len(max_len)
+        kv = (batch, T, cfg.num_kv_heads, cfg.resolved_head_dim)
+        L = cfg.num_layers
+        return {
+            "k": jnp.zeros((L,) + kv, self.cdtype),
+            "v": jnp.zeros((L,) + kv, self.cdtype),
+            "pos_ids": jnp.full((T,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_logical_axes(self) -> Dict[str, Any]:
+        kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        return {"k": kv, "v": kv, "pos_ids": ("cache_seq",), "pos": ()}
+
+    def prefill(self, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Run the full prompt, return last-token logits + filled cache."""
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        patch = batch.get("patch_embeds")
+        x = params["embed"].astype(self.cdtype)[tokens]
+        if patch is not None:
+            x = jnp.concatenate([patch.astype(self.cdtype), x], axis=1)
+        B, S, _ = x.shape
+        T = self.cache_len(S)
+        positions = jnp.arange(S, dtype=jnp.int32)
+        window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
+
+        def body(carry, layer_p):
+            h = carry
+            layer_p = mod.constrain_tree(layer_p, self.block_specs())
+            xn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+            q, k, v = qkv(cfg, layer_p["attn"], xn, positions)
+            o = chunked_attention(q, k, v, causal=True, window=window,
+                                  q_offset=0, chunk_q=cfg.attn_chunk_q,
+                                  chunk_kv=cfg.attn_chunk_kv,
+                                  block_skip=cfg.attn_block_skip)
+            h = h + dense(o, layer_p["attn"]["w_o"], "bshe,hed->bsd")
+            xn2 = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+            if cfg.num_experts > 0:
+                y = moe_ffn(cfg, layer_p["moe"], xn2)
+            else:
+                y = gated_mlp(xn2, layer_p["mlp"]["wi_gate"],
+                              layer_p["mlp"]["wi_up"], layer_p["mlp"]["wo"])
+            h = h + y
+            # keep last T positions in cache
+            return h, (k[:, S - T:].astype(self.cdtype),
+                       v[:, S - T:].astype(self.cdtype))
+
+        if cfg.scan_layers:
+            x, (ck, cv) = jax.lax.scan(body, x, params["blocks"])
+        else:
+            ks, vs = [], []
+            for i in range(cfg.num_layers):
+                layer_p = jax.tree_util.tree_map(lambda a: a[i], params["blocks"])
+                x, (k1, v1) = body(x, layer_p)
+                ks.append(k1)
+                vs.append(v1)
+            ck, cv = jnp.stack(ks), jnp.stack(vs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        logits = dense(x[:, -1:], head, "bsd,dv->bsv")
+        cache = {
+            "k": ck, "v": cv,
+            "pos_ids": jnp.arange(S - T, S, dtype=jnp.int32),
+            "pos": jnp.array(S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens: jax.Array):
+        """tokens: (B, 1). Appends one token; returns next-token logits."""
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]          # (B,1,D)
+        pos = cache["pos"]
+        T = cache["k"].shape[2]
+        slot = (pos % T).astype(jnp.int32)
+        positions = pos[None].astype(jnp.int32)                  # (1,)
+        window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
+        pos_ids = jax.lax.dynamic_update_slice(cache["pos_ids"], pos[None], (slot,))
+
+        def body(carry, xs):
+            h = carry
+            layer_p, ck, cv = xs
+            layer_p = mod.constrain_tree(layer_p, self.block_specs())
+            xn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
+            q, k, v = qkv(cfg, layer_p["attn"], xn, positions)
+            ck = jax.lax.dynamic_update_slice(
+                ck, k.astype(ck.dtype), (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cv, v.astype(cv.dtype), (0, slot, 0, 0))
+            o = chunked_attention(
+                q, ck.astype(h.dtype), cv.astype(h.dtype), causal=True,
+                window=window, q_offset=pos, kv_positions=pos_ids,
+                chunk_kv=min(1024, T))
+            h = h + dense(o, layer_p["attn"]["w_o"], "bshe,hed->bsd")
+            xn2 = rms_norm(h, layer_p["ln2"], cfg.norm_eps)
+            if cfg.num_experts > 0:
+                y = moe_ffn(cfg, layer_p["moe"], xn2)
+            else:
+                y = gated_mlp(xn2, layer_p["mlp"]["wi_gate"],
+                              layer_p["mlp"]["wi_up"], layer_p["mlp"]["wo"])
+            return h + y, (ck, cv)
+
+        if cfg.scan_layers:
+            x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
+                                                 cache["v"]))
+        else:
+            ks, vs = [], []
+            for i in range(cfg.num_layers):
+                xs = jax.tree_util.tree_map(lambda a: a[i],
+                                            (params["blocks"], cache["k"],
+                                             cache["v"]))
+                x, (k1, v1) = body(x, xs)
+                ks.append(k1)
+                vs.append(v1)
+            ck, cv = jnp.stack(ks), jnp.stack(vs)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        head = (params["embed"].T if cfg.tie_embeddings else params["head"])
+        logits = dense(x, head, "bsd,dv->bsv")
+        new_cache = {"k": ck, "v": cv, "pos_ids": pos_ids, "pos": pos + 1}
+        return logits, new_cache
+
+
+def build_model(cfg: ModelConfig):
+    if cfg.family in ("dense", "moe", "vlm"):
+        return TransformerLM(cfg)
+    if cfg.family == "hybrid":
+        from repro.models.recurrent_lm import GriffinLM
+        return GriffinLM(cfg)
+    if cfg.family == "ssm":
+        from repro.models.recurrent_lm import XLSTMLM
+        return XLSTMLM(cfg)
+    if cfg.family == "audio":
+        from repro.models.encdec import EncDecLM
+        return EncDecLM(cfg)
+    raise ValueError(f"unknown family {cfg.family!r}")

@@ -1,0 +1,181 @@
+"""Mixture-of-Experts FFN — the MIMDRAM MIMD-segment showcase.
+
+Experts are independent programs executing concurrently in different mesh
+segments (expert dim sharded over the 'model' axis). Token dispatch is the
+capacity-bounded scatter/gather formulation: O(T*k) routing work plus
+O(E*C*d*ff) expert compute — no O(T*E*C) one-hot tensors.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mimdram import constrain
+from repro.models import module as mod
+from repro.models.layers import dense
+
+
+def moe_param_specs(cfg: ModelConfig, dtype: Any) -> Dict[str, mod.ParamSpec]:
+    d, f, e = cfg.d_model, cfg.d_ff, cfg.num_experts
+    return {
+        "router": mod.spec((d, e), ("embed", "expert"), dtype),
+        "wi_gate": mod.spec((e, d, f), ("expert", "embed", "mlp"), dtype, ("normal", 1)),
+        "wi_up": mod.spec((e, d, f), ("expert", "embed", "mlp"), dtype, ("normal", 1)),
+        "wo": mod.spec((e, f, d), ("expert", "mlp", "embed"), dtype, ("normal", 1)),
+    }
+
+
+def _capacity(cfg: ModelConfig, tokens: int) -> int:
+    c = int(tokens * cfg.experts_per_token * cfg.capacity_factor // cfg.num_experts)
+    return max(c, cfg.experts_per_token)
+
+
+def _dispatch_plan(T: int):
+    """(n_groups, manual_axes, mesh): one dispatch group per data shard so
+    routing (cumsum, scatter, gather) never crosses devices — the
+    MIMDRAM-style 'keep work inside the mat' rule. Off-mesh: (1, (), None).
+    """
+    from repro.core.mimdram import _axis_size, current_plan  # noqa: PLC0415
+    plan = current_plan()
+    if plan is None or plan.mesh is None:
+        return 1, (), None
+    axes = plan.rules.get("act_batch") or ()
+    g = _axis_size(plan.mesh, axes)
+    if g <= 1 or T % g != 0:
+        return 1, (), None
+    # when already inside a shard_map (e.g. the Proteus cross-pod step), the
+    # nested shard_map must carry the context mesh's axis types
+    ctx = jax.sharding.get_abstract_mesh()
+    mesh = ctx if (ctx is not None and not ctx.empty
+                   and set(plan.mesh.axis_names) <= set(ctx.axis_names)) \
+        else plan.mesh.abstract_mesh
+    return g, tuple(axes), mesh
+
+
+def _scatter_to_buffers(xt, idx, slot, keep, E: int, C: int, axes, mesh):
+    """(G,Tl,D),(G,Tl,K)x3 -> (E,G,C,D). Manual over the data axes so the
+    scatter is provably device-local (GSPMD would otherwise all-reduce the
+    whole buffer); expert/model axes stay auto."""
+
+    def local(xt1, idx1, slot1, keep1):
+        # shapes (1, Tl, ...) per shard
+        buf = jnp.zeros((E, 1, C, xt1.shape[-1]), xt1.dtype)
+        scat = xt1[0, :, None, :] * keep1[0, ..., None]
+        return buf.at[idx1[0], 0, slot1[0]].add(scat, mode="drop")
+
+    if mesh is None:
+        return local(xt, idx, slot, keep)
+    from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+    sm = jax.shard_map(
+        local, mesh=mesh,                 # abstract; composes in context
+        in_specs=(P(axes), P(axes), P(axes), P(axes)),
+        out_specs=P(None, axes),
+        axis_names=frozenset(axes), check_vma=False)
+    return sm(xt, idx, slot, keep)
+
+
+def _gather_from_buffers(y_buf, idx, slot, axes, mesh):
+    """(E,G,C,D),(G,Tl,K)x2 -> (G,Tl,K,D), group-local."""
+
+    def local(yb1, idx1, slot1):
+        return yb1[:, 0][idx1[0], slot1[0]][None]            # (1,Tl,K,D)
+
+    if mesh is None:
+        return local(y_buf, idx, slot)
+    from jax.sharding import PartitionSpec as P  # noqa: PLC0415
+    sm = jax.shard_map(
+        local, mesh=mesh,                 # abstract; composes in context
+        in_specs=(P(None, axes), P(axes), P(axes)),
+        out_specs=P(axes),
+        axis_names=frozenset(axes), check_vma=False)
+    return sm(y_buf, idx, slot)
+
+
+def moe_ffn(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array) -> jax.Array:
+    """x: (B, S, D) -> (B, S, D). Dropped-token, capacity-bounded top-k MoE.
+
+    Dispatch is *group-local* (GShard/Switch-style): tokens are routed within
+    their data shard's group; per-group capacity buffers keep scatter/gather
+    and the position cumsum device-local, and only the expert einsum crosses
+    the mesh (expert/capacity dims on the model axis).
+    """
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    G, dax, mesh = _dispatch_plan(T)
+    Tl = T // G
+    C = _capacity(cfg, Tl)                                   # per-group
+    xt = x.reshape(G, Tl, D)
+    xt = constrain(xt, "act_batch", None, None)
+
+    logits = dense(xt, p["router"], "gtd,de->gte").astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)                      # (G, Tl, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    # position within the group's expert buffer: group-local cumsum
+    oh = jax.nn.one_hot(idx.reshape(G, Tl * K), E, dtype=jnp.int32)
+    pos = jnp.cumsum(oh, axis=1) - oh                        # slots before mine
+    pos = (pos * oh).sum(-1).reshape(G, Tl, K)
+    keep = (pos < C).astype(x.dtype)
+    slot = jnp.minimum(pos, C - 1)
+
+    # scatter tokens into (E, G, C, D) buffers (gates applied at combine);
+    # device-local by construction (manual over the data axes).
+    buf = _scatter_to_buffers(xt, idx, slot, keep, E, C, dax, mesh)
+    buf = constrain(buf, "act_expert", "act_batch", "act_cap", None)
+
+    # expert FFN: independent per-segment programs (MIMD over 'model' axis)
+    g = jnp.einsum("egcd,edf->egcf", buf, p["wi_gate"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    u = jnp.einsum("egcd,edf->egcf", buf, p["wi_up"].astype(x.dtype),
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    h = jax.nn.silu(g) * u
+    h = constrain(h, "act_expert", "act_batch", "act_cap", "act_ff")
+    y_buf = jnp.einsum("egcf,efd->egcd", h, p["wo"].astype(x.dtype),
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    y_buf = constrain(y_buf, "act_expert", "act_batch", "act_cap", None)
+
+    # gather back and combine with gates (group-local)
+    y = _gather_from_buffers(y_buf, idx, slot, dax, mesh)    # (G, Tl, K, D)
+    y = (y * (gate[..., None].astype(x.dtype)) * keep[..., None]).sum(axis=2)
+    return y.reshape(B, S, D)
+
+
+def moe_ffn_ref(cfg: ModelConfig, p: Dict[str, jax.Array], x: jax.Array,
+                respect_capacity: bool = True) -> jax.Array:
+    """Dense oracle: every token through every expert, masked combine (tests)."""
+    B, S, D = x.shape
+    T = B * S
+    E, K = cfg.num_experts, cfg.experts_per_token
+    C = _capacity(cfg, T)
+    xt = x.reshape(T, D).astype(jnp.float32)
+    logits = xt @ p["router"].astype(jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, K)
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    flat_idx = idx.reshape(-1)
+    oh = jax.nn.one_hot(flat_idx, E, dtype=jnp.int32)
+    pos = ((jnp.cumsum(oh, axis=0) - oh) * oh).sum(-1).reshape(T, K)
+    keep = (pos < C) if respect_capacity else jnp.ones_like(pos, bool)
+
+    y = jnp.zeros((T, D), jnp.float32)
+    for e in range(E):
+        g = jax.nn.silu(xt @ p["wi_gate"][e].astype(jnp.float32))
+        u = xt @ p["wi_up"][e].astype(jnp.float32)
+        ye = (g * u) @ p["wo"][e].astype(jnp.float32)
+        w = ((idx == e) * keep * gate).sum(axis=-1)          # (T,)
+        y = y + ye * w[:, None]
+    return y.reshape(B, S, D).astype(x.dtype)
+
+
+def load_balance_loss(router_probs: jax.Array, idx: jax.Array, E: int) -> jax.Array:
+    """Switch-style auxiliary loss (fraction-routed * mean-prob)."""
+    me = router_probs.mean(axis=0)                           # (E,)
+    ce = jnp.zeros((E,), jnp.float32).at[idx.reshape(-1)].add(1.0)
+    ce = ce / jnp.maximum(idx.size, 1)
+    return E * jnp.sum(me * ce)

@@ -1,0 +1,375 @@
+"""Recurrent-family LMs: GriffinLM (recurrentgemma) and XLSTMLM (xlstm).
+
+Both have O(1)-in-sequence decode state — the sub-quadratic families that run
+the long_500k cell.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mimdram import constrain
+from repro.models import module as mod
+from repro.models.layers import (chunked_attention, dense, gated_mlp, rms_norm,
+                                 softmax_xent)
+from repro.models.model import attn_param_specs, mlp_param_specs, qkv
+from repro.models.rglru import (init_rglru_state, recurrent_block,
+                                rglru_param_specs)
+from repro.models.xlstm import (init_mlstm_state, init_slstm_state,
+                                mlstm_chunked, mlstm_param_specs, mlstm_step,
+                                slstm_param_specs, slstm_scan)
+
+
+def _dt(name: str):
+    return {"float32": jnp.float32, "bfloat16": jnp.bfloat16}[name]
+
+
+# ===========================================================================
+# GriffinLM — pattern (recurrent, recurrent, local-attention) x groups
+# ===========================================================================
+class GriffinLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dt(cfg.param_dtype)
+        self.cdtype = _dt(cfg.compute_dtype)
+        self.n_groups = cfg.num_layers // 3
+        self.n_tail = cfg.num_layers - 3 * self.n_groups  # trailing recurrent
+
+    # -- specs ----------------------------------------------------------------
+    def _rec_layer_specs(self):
+        cfg = self.cfg
+        return {
+            "ln1": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "rec": rglru_param_specs(cfg, self.dtype),
+            "ln2": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "mlp": mlp_param_specs(cfg, self.dtype),
+        }
+
+    def _attn_layer_specs(self):
+        cfg = self.cfg
+        return {
+            "ln1": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "attn": attn_param_specs(cfg, self.dtype),
+            "ln2": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+            "mlp": mlp_param_specs(cfg, self.dtype),
+        }
+
+    def _group_specs(self):
+        return {
+            "rec1": self._rec_layer_specs(),
+            "rec2": self._rec_layer_specs(),
+            "attn": self._attn_layer_specs(),
+        }
+
+    def param_specs(self):
+        cfg = self.cfg
+        group = self._group_specs()
+        specs = {
+            "embed": mod.spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              self.dtype),
+            "groups": mod.stack_tree(group, self.n_groups),
+            "tail": [self._rec_layer_specs() for _ in range(self.n_tail)],
+            "final_norm": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+        }
+        return specs
+
+    # -- layers ---------------------------------------------------------------
+    def _rec_layer(self, p, x, state):
+        cfg = self.cfg
+        y, new_state = recurrent_block(cfg, p["rec"],
+                                       rms_norm(x, p["ln1"], cfg.norm_eps), state)
+        x = x + y
+        x = x + gated_mlp(rms_norm(x, p["ln2"], cfg.norm_eps),
+                          p["mlp"]["wi_gate"], p["mlp"]["wi_up"], p["mlp"]["wo"])
+        return constrain(x, "act_batch", "act_seq", "act_embed"), new_state
+
+    def _attn_layer(self, p, x, cache, pos, pos_ids):
+        """Local MQA. cache: (k, v) ring buffers or None (train)."""
+        cfg = self.cfg
+        xn = rms_norm(x, p["ln1"], cfg.norm_eps)
+        positions = (jnp.arange(x.shape[1], dtype=jnp.int32)
+                     if cache is None else pos[None].astype(jnp.int32))
+        q, k, v = qkv(cfg, p["attn"], xn, positions)
+        new_cache = None
+        if cache is None:
+            o = chunked_attention(q, k, v, causal=True, window=cfg.local_window,
+                                  q_offset=0)
+        else:
+            ck, cv = cache
+            T = ck.shape[1]
+            slot = (pos % T).astype(jnp.int32)
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            o = chunked_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+                                  causal=True, window=cfg.local_window,
+                                  q_offset=pos, kv_positions=pos_ids,
+                                  chunk_kv=min(1024, T))
+            new_cache = (ck, cv)
+        x = x + dense(o, p["attn"]["w_o"], "bshe,hed->bsd")
+        x = x + gated_mlp(rms_norm(x, p["ln2"], cfg.norm_eps),
+                          p["mlp"]["wi_gate"], p["mlp"]["wi_up"], p["mlp"]["wo"])
+        return constrain(x, "act_batch", "act_seq", "act_embed"), new_cache
+
+    # -- train forward ----------------------------------------------------------
+    def forward(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]
+        x = constrain(x, "act_batch", "act_seq", "act_embed")
+
+        def group_body(carry, gp):
+            h = jax.lax.optimization_barrier(carry)
+            gp = mod.constrain_tree(gp, self._group_specs())
+            h, _ = self._rec_layer(gp["rec1"], h, None)
+            h, _ = self._rec_layer(gp["rec2"], h, None)
+            h, _ = self._attn_layer(gp["attn"], h, None, None, None)
+            return h, None
+
+        fn = group_body
+        if cfg.remat != "none":
+            fn = jax.checkpoint(group_body, prevent_cse=False)
+        x, _ = jax.lax.scan(fn, x, params["groups"])
+        for tp in params["tail"]:
+            x, _ = self._rec_layer(tp, x, None)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x, params["embed"].T, "bsd,dv->bsv")
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(
+                logits.astype(jnp.float32) / cfg.logit_softcap).astype(logits.dtype)
+        return constrain(logits, "act_batch", "act_seq", "act_vocab")
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:],
+                            batch.get("loss_mask"))
+
+    # -- serving ------------------------------------------------------------------
+    def cache_len(self, max_len: int) -> int:
+        return min(max_len, self.cfg.local_window)
+
+    def _rec_state_zero(self, batch: int):
+        cfg = self.cfg
+        return {
+            "h": jnp.zeros((batch, cfg.d_model), jnp.float32),
+            "conv": jnp.zeros((batch, cfg.conv_width - 1, cfg.d_model),
+                              self.cdtype),
+        }
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        T = self.cache_len(max_len)
+        G = self.n_groups
+        kv = (batch, T, cfg.num_kv_heads, cfg.resolved_head_dim)
+        stack = lambda t: jax.tree_util.tree_map(
+            lambda a: jnp.broadcast_to(a, (G,) + a.shape), t)
+        return {
+            "rec1": stack(self._rec_state_zero(batch)),
+            "rec2": stack(self._rec_state_zero(batch)),
+            "k": jnp.zeros((G,) + kv, self.cdtype),
+            "v": jnp.zeros((G,) + kv, self.cdtype),
+            "tail": [self._rec_state_zero(batch) for _ in range(self.n_tail)],
+            "pos_ids": jnp.full((T,), -1, jnp.int32),
+            "pos": jnp.zeros((), jnp.int32),
+        }
+
+    def cache_logical_axes(self):
+        rec = {"h": ("layers", "act_batch", "act_embed"),
+               "conv": ("layers", "act_batch", None, "act_embed")}
+        kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        return {
+            "rec1": rec, "rec2": rec, "k": kv, "v": kv,
+            "tail": [{"h": ("act_batch", "act_embed"),
+                      "conv": ("act_batch", None, "act_embed")}
+                     for _ in range(self.n_tail)],
+            "pos_ids": ("cache_seq",), "pos": (),
+        }
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        B, S = tokens.shape
+        T = self.cache_len(S)
+        x = params["embed"].astype(self.cdtype)[tokens]
+
+        def group_body(carry, gp):
+            h = carry
+            gp = mod.constrain_tree(gp, self._group_specs())
+            h, s1 = self._rec_layer(gp["rec1"], h, self._rec_state_zero(B))
+            h, s2 = self._rec_layer(gp["rec2"], h, self._rec_state_zero(B))
+            # attn with window cache from last T positions
+            xn = rms_norm(h, gp["attn"]["ln1"], cfg.norm_eps)
+            positions = jnp.arange(S, dtype=jnp.int32)
+            q, k, v = qkv(cfg, gp["attn"]["attn"], xn, positions)
+            o = chunked_attention(q, k, v, causal=True, window=cfg.local_window,
+                                  q_offset=0)
+            h = h + dense(o, gp["attn"]["attn"]["w_o"], "bshe,hed->bsd")
+            h = h + gated_mlp(rms_norm(h, gp["attn"]["ln2"], cfg.norm_eps),
+                              gp["attn"]["mlp"]["wi_gate"],
+                              gp["attn"]["mlp"]["wi_up"],
+                              gp["attn"]["mlp"]["wo"])
+            return h, (s1, s2, k[:, S - T:].astype(self.cdtype),
+                       v[:, S - T:].astype(self.cdtype))
+
+        x, (s1, s2, ck, cv) = jax.lax.scan(group_body, x, params["groups"])
+        tail_states = []
+        for tp in params["tail"]:
+            x, st = self._rec_layer(tp, x, self._rec_state_zero(B))
+            tail_states.append(st)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x[:, -1:], params["embed"].T, "bsd,dv->bsv")
+        cache = {
+            "rec1": s1, "rec2": s2, "k": ck, "v": cv, "tail": tail_states,
+            "pos_ids": jnp.arange(S - T, S, dtype=jnp.int32),
+            "pos": jnp.array(S, jnp.int32),
+        }
+        return logits, cache
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]      # (B,1,D)
+        pos = cache["pos"]
+        T = cache["k"].shape[2]
+        slot = (pos % T).astype(jnp.int32)
+        pos_ids = jax.lax.dynamic_update_slice(cache["pos_ids"], pos[None], (slot,))
+
+        def group_body(carry, xs):
+            h = carry
+            gp, s1, s2, ck, cv = xs
+            gp = mod.constrain_tree(gp, self._group_specs())
+            h, s1n = self._rec_layer(gp["rec1"], h, s1)
+            h, s2n = self._rec_layer(gp["rec2"], h, s2)
+            h, kv_new = self._attn_layer(gp["attn"], h, (ck, cv), pos, pos_ids)
+            return h, (s1n, s2n, kv_new[0], kv_new[1])
+
+        x, (s1, s2, ck, cv) = jax.lax.scan(
+            group_body, x,
+            (params["groups"], cache["rec1"], cache["rec2"], cache["k"],
+             cache["v"]))
+        tail_states = []
+        for tp, st in zip(params["tail"], cache["tail"]):
+            x, stn = self._rec_layer(tp, x, st)
+            tail_states.append(stn)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x, params["embed"].T, "bsd,dv->bsv")
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(
+                logits.astype(jnp.float32) / cfg.logit_softcap).astype(logits.dtype)
+        new_cache = {
+            "rec1": s1, "rec2": s2, "k": ck, "v": cv, "tail": tail_states,
+            "pos_ids": pos_ids, "pos": pos + 1,
+        }
+        return logits, new_cache
+
+
+# ===========================================================================
+# XLSTMLM — interleaved mLSTM / sLSTM blocks (12 layers, unrolled)
+# ===========================================================================
+class XLSTMLM:
+    def __init__(self, cfg: ModelConfig):
+        self.cfg = cfg
+        self.dtype = _dt(cfg.param_dtype)
+        self.cdtype = _dt(cfg.compute_dtype)
+
+    def _is_slstm(self, i: int) -> bool:
+        k = self.cfg.slstm_every
+        return k > 0 and (i + 1) % k == 0
+
+    def param_specs(self):
+        cfg = self.cfg
+        blocks = []
+        for i in range(cfg.num_layers):
+            ln = mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",))
+            if self._is_slstm(i):
+                blocks.append({"ln": ln, "slstm": slstm_param_specs(cfg, self.dtype)})
+            else:
+                blocks.append({"ln": ln, "mlstm": mlstm_param_specs(cfg, self.dtype)})
+        return {
+            "embed": mod.spec((cfg.vocab_size, cfg.d_model), ("vocab", "embed"),
+                              self.dtype),
+            "blocks": blocks,
+            "final_norm": mod.spec((cfg.d_model,), (None,), jnp.float32, ("ones",)),
+        }
+
+    def _apply_block(self, i, p, x, state):
+        cfg = self.cfg
+        xn = rms_norm(x, p["ln"], cfg.norm_eps)
+        if self._is_slstm(i):
+            y, st = slstm_scan(cfg, p["slstm"], xn, state)
+        else:
+            if x.shape[1] == 1 and state is not None:
+                y, st = mlstm_step(cfg, p["mlstm"], xn, state)
+            else:
+                y, st = mlstm_chunked(cfg, p["mlstm"], xn, state,
+                                      chunk=min(256, x.shape[1]))
+        return constrain(x + y, "act_batch", "act_seq", "act_embed"), st
+
+    def forward(self, params, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]
+        for i, p in enumerate(params["blocks"]):
+            blk = lambda pp, xx, i=i: self._apply_block(i, pp, xx, None)[0]
+            if cfg.remat != "none":
+                blk = jax.checkpoint(blk, prevent_cse=False)
+            x = blk(p, x)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        return dense(x, params["embed"].T, "bsd,dv->bsv")
+
+    def loss(self, params, batch):
+        logits = self.forward(params, batch["tokens"])
+        return softmax_xent(logits[:, :-1], batch["labels"][:, 1:],
+                            batch.get("loss_mask"))
+
+    def init_cache(self, batch: int, max_len: int):
+        cfg = self.cfg
+        states = []
+        for i in range(cfg.num_layers):
+            if self._is_slstm(i):
+                states.append(init_slstm_state(cfg, batch))
+            else:
+                states.append(init_mlstm_state(cfg, batch))
+        return {"blocks": states, "pos": jnp.zeros((), jnp.int32)}
+
+    def cache_logical_axes(self):
+        cfg = self.cfg
+        states = []
+        for i in range(cfg.num_layers):
+            if self._is_slstm(i):
+                states.append({k: ("act_batch", "act_embed")
+                               for k in ("c", "n", "m", "h")})
+            else:
+                states.append({
+                    "C": ("act_batch", "act_heads", "act_hd", None),
+                    "n": ("act_batch", "act_heads", "act_hd"),
+                    "m": ("act_batch", "act_heads"),
+                })
+        return {"blocks": states, "pos": ()}
+
+    def prefill(self, params, batch):
+        cfg = self.cfg
+        tokens = batch["tokens"]
+        x = params["embed"].astype(self.cdtype)[tokens]
+        states = []
+        for i, p in enumerate(params["blocks"]):
+            init = (init_slstm_state(cfg, x.shape[0]) if self._is_slstm(i)
+                    else init_mlstm_state(cfg, x.shape[0]))
+            x, st = self._apply_block(i, p, x, init)
+            states.append(st)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x[:, -1:], params["embed"].T, "bsd,dv->bsv")
+        return logits, {"blocks": states,
+                        "pos": jnp.array(tokens.shape[1], jnp.int32)}
+
+    def decode_step(self, params, cache, tokens):
+        cfg = self.cfg
+        x = params["embed"].astype(self.cdtype)[tokens]
+        states = []
+        for i, p in enumerate(params["blocks"]):
+            x, st = self._apply_block(i, p, x, cache["blocks"][i])
+            states.append(st)
+        x = rms_norm(x, params["final_norm"], cfg.norm_eps)
+        logits = dense(x, params["embed"].T, "bsd,dv->bsv")
+        return logits, {"blocks": states, "pos": cache["pos"] + 1}

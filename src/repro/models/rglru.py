@@ -1,0 +1,118 @@
+"""RG-LRU recurrent temporal-mixing block (RecurrentGemma / Griffin).
+
+h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),
+a_t = exp(-c * softplus(Lambda) * sigmoid(r_t))
+
+Train/prefill use an associative scan (parallel, O(log T) depth); decode is a
+single O(1) state update — the bounded-state property that makes long_500k
+runnable for this family.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mimdram import constrain
+from repro.models import module as mod
+from repro.models.layers import dense
+
+
+def rglru_param_specs(cfg: ModelConfig, dtype: Any) -> Dict[str, mod.ParamSpec]:
+    d = cfg.d_model
+    w = cfg.conv_width
+    return {
+        # gated two-branch temporal block (Griffin recurrent block)
+        "w_gate": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_x": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "conv_w": mod.spec((w, d), ("conv", "mlp"), dtype),
+        "conv_b": mod.spec((d,), ("mlp",), dtype, ("zeros",)),
+        "lam": mod.spec((d,), ("mlp",), jnp.float32, ("rglru_lambda",)),
+        "w_input_gate": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_rec_gate": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_out": mod.spec((d, d), ("mlp", "embed"), dtype),
+    }
+
+
+def _gates(cfg: ModelConfig, p, xb: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """log a_t (fp32) and gated input branch. xb: (B, S, D)."""
+    r = dense(xb, p["w_rec_gate"], "bsd,de->bse").astype(jnp.float32)
+    i = dense(xb, p["w_input_gate"], "bsd,de->bse").astype(jnp.float32)
+    log_a = -cfg.rglru_c * jax.nn.softplus(p["lam"]) * jax.nn.sigmoid(r)
+    a2 = jnp.exp(2.0 * log_a)
+    gated = jnp.sqrt(jnp.maximum(1.0 - a2, 1e-9)) * jax.nn.sigmoid(i) * xb.astype(
+        jnp.float32
+    )
+    return log_a, gated
+
+
+def rglru_scan(cfg: ModelConfig, p, xb: jax.Array,
+               h0: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Parallel linear recurrence. xb: (B, S, D) -> (out, h_last)."""
+    log_a, b = _gates(cfg, p, xb)
+    a = jnp.exp(log_a)
+    if h0 is not None:
+        b = b.at[:, 0].add(a[:, 0] * h0.astype(jnp.float32))
+
+    def op(e1, e2):
+        a1, b1 = e1
+        a2, b2 = e2
+        return a1 * a2, a2 * b1 + b2
+
+    a_c, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h.astype(xb.dtype), h[:, -1]
+
+
+def rglru_step(cfg: ModelConfig, p, xb: jax.Array,
+               h: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode step. xb: (B, 1, D), h: (B, D) fp32 state."""
+    log_a, b = _gates(cfg, p, xb)
+    h_new = jnp.exp(log_a[:, 0]) * h + b[:, 0]
+    return h_new[:, None, :].astype(xb.dtype), h_new
+
+
+def causal_conv(x: jax.Array, w: jax.Array, b: jax.Array,
+                state: jax.Array | None = None) -> Tuple[jax.Array, jax.Array]:
+    """Depthwise causal conv, width W. x: (B, S, D); state: (B, W-1, D)."""
+    W = w.shape[0]
+    if state is None:
+        state = jnp.zeros((x.shape[0], W - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([state.astype(x.dtype), x], axis=1)  # (B, S+W-1, D)
+    out = jnp.zeros_like(x)
+    for i in range(W):
+        out = out + xp[:, i : i + x.shape[1]] * w[i].astype(x.dtype)
+    out = out + b.astype(x.dtype)
+    new_state = xp[:, -(W - 1):] if W > 1 else state
+    return out, new_state
+
+
+def recurrent_block(cfg: ModelConfig, p, x: jax.Array,
+                    state: Dict[str, jax.Array] | None = None
+                    ) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Griffin recurrent temporal-mixing block (gated two-branch).
+
+    x: (B, S, D). state: {"h": (B,D) fp32, "conv": (B,W-1,D)} or None.
+    """
+    gate = jax.nn.gelu(dense(x, p["w_gate"], "bsd,de->bse"))
+    xb = dense(x, p["w_x"], "bsd,de->bse")
+    xb = constrain(xb, "act_batch", "act_seq", "act_ff")
+    conv_state = None if state is None else state["conv"]
+    xb, new_conv = causal_conv(xb, p["conv_w"], p["conv_b"], conv_state)
+    if state is None:
+        y, h_last = rglru_scan(cfg, p, xb, None)
+    elif x.shape[1] == 1:
+        y, h_last = rglru_step(cfg, p, xb, state["h"])
+    else:
+        y, h_last = rglru_scan(cfg, p, xb, state["h"])
+    out = dense(gate * y, p["w_out"], "bse,ed->bsd")
+    return out, {"h": h_last, "conv": new_conv}
+
+
+def init_rglru_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d, w = cfg.d_model, cfg.conv_width
+    return {
+        "h": jnp.zeros((batch, d), jnp.float32),
+        "conv": jnp.zeros((batch, w - 1, d), jnp.bfloat16),
+    }

@@ -1,0 +1,238 @@
+"""xLSTM blocks: chunkwise-parallel mLSTM + sequential sLSTM (arXiv:2405.04517).
+
+mLSTM: matrix memory C_t = f_t C_{t-1} + i_t v_t k_t^T, parallelized
+chunkwise (intra-chunk quadratic + inter-chunk recurrent state) so train /
+prefill memory stays O(chunk^2) — same data-movement philosophy as the
+chunked attention path. sLSTM: scalar memory, inherently sequential (thesis
+of the xLSTM paper) -> lax.scan over time.
+
+d_ff = 0 in the assigned config: projections live inside the blocks; there is
+no separate FFN.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.core.mimdram import constrain
+from repro.models import module as mod
+from repro.models.layers import dense, rms_norm
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+def mlstm_param_specs(cfg: ModelConfig, dtype: Any) -> Dict[str, mod.ParamSpec]:
+    d, h = cfg.d_model, cfg.num_heads
+    dh = d // h
+    return {
+        "w_q": mod.spec((d, h, dh), ("embed", "heads", "head_dim"), dtype),
+        "w_k": mod.spec((d, h, dh), ("embed", "heads", "head_dim"), dtype),
+        "w_v": mod.spec((d, h, dh), ("embed", "heads", "head_dim"), dtype),
+        "w_i": mod.spec((d, h), ("embed", "heads"), dtype),
+        "w_f": mod.spec((d, h), ("embed", "heads"), dtype),
+        "b_i": mod.spec((h,), ("heads",), jnp.float32, ("zeros",)),
+        "b_f": mod.spec((h,), ("heads",), jnp.float32, ("ones",)),
+        "w_gate": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_out": mod.spec((d, d), ("mlp", "embed"), dtype),
+        "norm": mod.spec((d,), (None,), jnp.float32, ("ones",)),
+    }
+
+
+def _mlstm_gates(p, x):
+    """i, f gate pre-activations in fp32. x: (B,S,D) -> (B,S,H)."""
+    i = dense(x, p["w_i"], "bsd,dh->bsh").astype(jnp.float32) + p["b_i"]
+    f = dense(x, p["w_f"], "bsd,dh->bsh").astype(jnp.float32) + p["b_f"]
+    return i, f
+
+
+def mlstm_chunked(cfg: ModelConfig, p, x: jax.Array,
+                  state: Dict[str, jax.Array] | None = None,
+                  chunk: int = 256) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Chunkwise-parallel mLSTM. x: (B,S,D) -> (y, state).
+
+    State: C (B,H,Dk,Dv), n (B,H,Dk), m (B,H) — log-space stabilized.
+    """
+    B, S, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    c = min(chunk, S)
+    assert S % c == 0
+    nchunk = S // c
+
+    q = dense(x, p["w_q"], "bsd,dhe->bshe") / (dh ** 0.5)
+    k = dense(x, p["w_k"], "bsd,dhe->bshe")
+    v = dense(x, p["w_v"], "bsd,dhe->bshe")
+    i_pre, f_pre = _mlstm_gates(p, x)                       # (B,S,H)
+    log_f = -jax.nn.softplus(-f_pre)                        # log sigmoid(f)
+    log_i = i_pre                                           # i = exp(i_pre)
+
+    qg = q.reshape(B, nchunk, c, H, dh)
+    kg = k.reshape(B, nchunk, c, H, dh)
+    vg = v.reshape(B, nchunk, c, H, dh)
+    lfg = log_f.reshape(B, nchunk, c, H)
+    lig = log_i.reshape(B, nchunk, c, H)
+
+    if state is None:
+        C0 = jnp.zeros((B, H, dh, dh), jnp.float32)
+        n0 = jnp.zeros((B, H, dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = state["C"], state["n"], state["m"]
+
+    def chunk_step(carry, j):
+        C, n, m = carry
+        qc = qg[:, j].astype(jnp.float32)                   # (B,c,H,dh)
+        kc = kg[:, j].astype(jnp.float32)
+        vc = vg[:, j].astype(jnp.float32)
+        lf = lfg[:, j]                                      # (B,c,H)
+        li = lig[:, j]
+        csum = jnp.cumsum(lf, axis=1)                       # inclusive
+        total = csum[:, -1]                                 # (B,H)
+        # decay from chunk start to t (exclusive of t's own f? standard:
+        # b_t = csum_t includes f_t; state contribution decayed by csum_t)
+        # intra-chunk log weights: w[t,s] = csum_t - csum_s + li_s  (s <= t)
+        dmat = csum[:, :, None, :] - csum[:, None, :, :]    # (B,t,s,H)
+        logw = dmat + li[:, None, :, :]
+        tri = jnp.tril(jnp.ones((c, c), bool))
+        logw = jnp.where(tri[None, :, :, None], logw, -1e30)
+        # inter-chunk: q_t reads state decayed by csum_t, with stabilizer m
+        m_inter = csum + m[:, None, :]                      # (B,t,H)
+        m_intra = logw.max(axis=2)                          # (B,t,H)
+        m_t = jnp.maximum(m_inter, m_intra)
+        w = jnp.exp(logw - m_t[:, :, None, :])              # (B,t,s,H)
+        scores = jnp.einsum("bthe,bshe->btsh", qc, kc)      # (B,t,s,H)
+        num_intra = jnp.einsum("btsh,btsh,bshe->bthe", scores, w, vc)
+        den_intra = jnp.einsum("btsh,btsh,bsh->bth", scores, w,
+                               jnp.ones((B, c, H), jnp.float32))
+        # denominator uses k-normalizer: den = q . n-style sum of w * (q.k)
+        inter_scale = jnp.exp(m_inter - m_t)                # (B,t,H)
+        num_inter = jnp.einsum("bthe,bhef->bthf", qc, C) * inter_scale[..., None]
+        den_inter = jnp.einsum("bthe,bhe->bth", qc, n) * inter_scale
+        num = num_intra + num_inter
+        den = den_intra + den_inter
+        den = jnp.maximum(jnp.abs(den), jnp.exp(-m_t))      # xLSTM max(|n|,1) stab
+        y = num / den[..., None]
+        # state update: C' = exp(total + m - m') C + sum_s exp(total-csum_s+li_s - m') k_s v_s
+        m_new = jnp.maximum(total + m, (total[:, None] - csum + li).max(axis=1))
+        sk = jnp.exp(total[:, None] - csum + li - m_new[:, None])  # (B,s,H)
+        C_new = (
+            jnp.exp(total + m - m_new)[:, :, None, None] * C
+            + jnp.einsum("bsh,bshe,bshf->bhef", sk, kc, vc)
+        )
+        n_new = (
+            jnp.exp(total + m - m_new)[:, :, None] * n
+            + jnp.einsum("bsh,bshe->bhe", sk, kc)
+        )
+        return (C_new, n_new, m_new), y.astype(x.dtype)
+
+    (C, n, m), ys = jax.lax.scan(chunk_step, (C0, n0, m0),
+                                 jnp.arange(nchunk, dtype=jnp.int32))
+    # ys: (nchunk, B, c, H, dh)
+    y = jnp.moveaxis(ys, 0, 1).reshape(B, S, H, dh).reshape(B, S, D)
+    gate = jax.nn.silu(dense(x, p["w_gate"], "bsd,de->bse"))
+    y = rms_norm(y, p["norm"], 1e-6) * gate
+    out = dense(y, p["w_out"], "bse,ed->bsd")
+    return out, {"C": C, "n": n, "m": m}
+
+
+def mlstm_step(cfg: ModelConfig, p, x: jax.Array,
+               state: Dict[str, jax.Array]) -> Tuple[jax.Array, Dict[str, jax.Array]]:
+    """Decode step (B,1,D) with O(1) matrix-memory update."""
+    B, _, D = x.shape
+    H = cfg.num_heads
+    dh = D // H
+    q = dense(x, p["w_q"], "bsd,dhe->bshe")[:, 0].astype(jnp.float32) / (dh ** 0.5)
+    k = dense(x, p["w_k"], "bsd,dhe->bshe")[:, 0].astype(jnp.float32)
+    v = dense(x, p["w_v"], "bsd,dhe->bshe")[:, 0].astype(jnp.float32)
+    i_pre, f_pre = _mlstm_gates(p, x)
+    li = i_pre[:, 0]                                        # (B,H)
+    lf = -jax.nn.softplus(-f_pre[:, 0])
+    C, n, m = state["C"], state["n"], state["m"]
+    m_new = jnp.maximum(lf + m, li)
+    C = jnp.exp(lf + m - m_new)[..., None, None] * C + jnp.exp(li - m_new)[
+        ..., None, None
+    ] * jnp.einsum("bhe,bhf->bhef", k, v)
+    n = jnp.exp(lf + m - m_new)[..., None] * n + jnp.exp(li - m_new)[..., None] * k
+    num = jnp.einsum("bhe,bhef->bhf", q, C)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhe,bhe->bh", q, n)), jnp.exp(-m_new))
+    y = (num / den[..., None]).reshape(B, 1, D).astype(x.dtype)
+    gate = jax.nn.silu(dense(x, p["w_gate"], "bsd,de->bse"))
+    y = rms_norm(y, p["norm"], 1e-6) * gate
+    out = dense(y, p["w_out"], "bse,ed->bsd")
+    return out, {"C": C, "n": n, "m": m_new}
+
+
+def init_mlstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    H = cfg.num_heads
+    dh = cfg.d_model // H
+    return {
+        "C": jnp.zeros((batch, H, dh, dh), jnp.float32),
+        "n": jnp.zeros((batch, H, dh), jnp.float32),
+        "m": jnp.full((batch, H), -1e30, jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+def slstm_param_specs(cfg: ModelConfig, dtype: Any) -> Dict[str, mod.ParamSpec]:
+    d, h = cfg.d_model, cfg.num_heads
+    return {
+        "w_z": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_i": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_f": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "w_o": mod.spec((d, d), ("embed", "mlp"), dtype),
+        "r_z": mod.spec((d,), ("mlp",), jnp.float32, ("zeros",)),
+        "r_i": mod.spec((d,), ("mlp",), jnp.float32, ("zeros",)),
+        "r_f": mod.spec((d,), ("mlp",), jnp.float32, ("zeros",)),
+        "r_o": mod.spec((d,), ("mlp",), jnp.float32, ("zeros",)),
+        "w_out": mod.spec((d, d), ("mlp", "embed"), dtype),
+        "norm": mod.spec((d,), (None,), jnp.float32, ("ones",)),
+    }
+
+
+def _slstm_cell(p, zi, ii, fi, oi, state):
+    """One timestep. pre-activations (B,D) fp32; state (c,n,m,h)."""
+    c, n, m, h = state
+    z = jnp.tanh(zi + p["r_z"] * h)
+    o = jax.nn.sigmoid(oi + p["r_o"] * h)
+    log_i = ii + p["r_i"] * h
+    log_f = -jax.nn.softplus(-(fi + p["r_f"] * h))          # log sigmoid
+    m_new = jnp.maximum(log_f + m, log_i)
+    c_new = jnp.exp(log_f + m - m_new) * c + jnp.exp(log_i - m_new) * z
+    n_new = jnp.exp(log_f + m - m_new) * n + jnp.exp(log_i - m_new)
+    h_new = o * c_new / jnp.maximum(n_new, 1.0)
+    return (c_new, n_new, m_new, h_new)
+
+
+def slstm_scan(cfg: ModelConfig, p, x: jax.Array,
+               state=None) -> Tuple[jax.Array, Any]:
+    """Sequential sLSTM over time. x: (B,S,D)."""
+    B, S, D = x.shape
+    zi = dense(x, p["w_z"], "bsd,de->bse").astype(jnp.float32)
+    ii = dense(x, p["w_i"], "bsd,de->bse").astype(jnp.float32)
+    fi = dense(x, p["w_f"], "bsd,de->bse").astype(jnp.float32)
+    oi = dense(x, p["w_o"], "bsd,de->bse").astype(jnp.float32)
+    if state is None:
+        state = init_slstm_state(cfg, B)
+    st = (state["c"], state["n"], state["m"], state["h"])
+
+    def step(carry, t):
+        new = _slstm_cell(p, zi[:, t], ii[:, t], fi[:, t], oi[:, t], carry)
+        return new, new[3]
+
+    st, hs = jax.lax.scan(step, st, jnp.arange(S, dtype=jnp.int32))
+    y = jnp.moveaxis(hs, 0, 1).astype(x.dtype)              # (B,S,D)
+    y = rms_norm(y, p["norm"], 1e-6)
+    out = dense(y, p["w_out"], "bse,ed->bsd")
+    return out, {"c": st[0], "n": st[1], "m": st[2], "h": st[3]}
+
+
+def init_slstm_state(cfg: ModelConfig, batch: int) -> Dict[str, jax.Array]:
+    d = cfg.d_model
+    z = lambda: jnp.zeros((batch, d), jnp.float32)
+    return {"c": z(), "n": z(), "m": z(), "h": z()}

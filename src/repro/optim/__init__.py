@@ -1,0 +1,6 @@
+from repro.optim.optimizers import (Optimizer, adafactor, adamw,
+                                    cosine_schedule, global_norm,
+                                    make_optimizer, sgd)
+
+__all__ = ["Optimizer", "adamw", "adafactor", "sgd", "make_optimizer",
+           "cosine_schedule", "global_norm"]

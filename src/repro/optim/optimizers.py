@@ -1,0 +1,244 @@
+"""Optimizers: AdamW, Adafactor (factored 2nd moment), SGD — pure JAX.
+
+Optimizer state reuses the parameters' logical sharding axes (ZeRO-style:
+states live wherever their parameter shard lives), so the MIMDRAM planner
+shards them with zero extra policy. ``state_specs`` feeds the dry-run the
+abstract state tree.
+
+Adafactor exists because of the kimi-k2 memory budget: 1T params cannot hold
+12 B/param Adam state in 512 x 16 GB HBM (see configs/kimi_k2_1t.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.models import module as mod
+
+
+def cosine_schedule(base_lr: float, warmup: int, total: int,
+                    final_frac: float = 0.1) -> Callable:
+    def lr(step):
+        step = jnp.asarray(step, jnp.float32)
+        warm = base_lr * step / jnp.maximum(warmup, 1)
+        prog = jnp.clip((step - warmup) / jnp.maximum(total - warmup, 1), 0, 1)
+        cos = base_lr * (final_frac + (1 - final_frac) * 0.5 *
+                         (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+    return lr
+
+
+def global_norm(tree: Any) -> jax.Array:
+    s = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+            for x in jax.tree_util.tree_leaves(tree))
+    return jnp.sqrt(s)
+
+
+def clip_by_global_norm(tree: Any, max_norm: float) -> Tuple[Any, jax.Array]:
+    n = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(n, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale.astype(g.dtype), tree), n
+
+
+@dataclass(frozen=True)
+class Optimizer:
+    name: str
+    init: Callable[[Any], Any]                     # params -> state
+    update: Callable[[Any, Any, Any], Tuple[Any, Any]]  # (g, state, p) -> (p', s')
+    state_specs: Callable[[Any], Any]              # param specs -> state specs
+
+
+def _f32_like_specs(specs: Any) -> Any:
+    return jax.tree_util.tree_map(
+        lambda s: mod.ParamSpec(s.shape, jnp.float32, s.logical_axes, ("zeros",)),
+        specs, is_leaf=mod.is_spec)
+
+
+# ---------------------------------------------------------------------------
+# AdamW
+# ---------------------------------------------------------------------------
+def adamw(run: RunConfig) -> Optimizer:
+    lr_fn = cosine_schedule(run.learning_rate, run.warmup_steps, run.total_steps)
+    b1, b2, wd, eps = run.b1, run.b2, run.weight_decay, 1e-8
+
+    def init(params):
+        z = lambda p: jnp.zeros(p.shape, jnp.float32)
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(z, params),
+            "nu": jax.tree_util.tree_map(z, params),
+        }
+
+    def update(grads, state, params):
+        grads, gnorm = clip_by_global_norm(grads, run.grad_clip)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+        t = step.astype(jnp.float32)
+        bc1 = 1 - b1 ** t
+        bc2 = 1 - b2 ** t
+
+        def upd(g, m, v, p):
+            gf = g.astype(jnp.float32)
+            m = b1 * m + (1 - b1) * gf
+            v = b2 * v + (1 - b2) * gf * gf
+            mh = m / bc1
+            vh = v / bc2
+            delta = mh / (jnp.sqrt(vh) + eps) + wd * p.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_v = treedef.flatten_up_to(state["nu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, v, p) for g, m, v, p in
+               zip(flat_g, flat_m, flat_v, flat_p)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_m = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        new_v = jax.tree_util.tree_unflatten(treedef, [o[2] for o in out])
+        return new_p, {"step": step, "mu": new_m, "nu": new_v}
+
+    def state_specs(param_specs):
+        return {
+            "step": mod.ParamSpec((), jnp.int32, (), ("zeros",)),
+            "mu": _f32_like_specs(param_specs),
+            "nu": _f32_like_specs(param_specs),
+        }
+
+    return Optimizer("adamw", init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# Adafactor (Shazeer & Stern 2018), factored second moment
+# ---------------------------------------------------------------------------
+def _factored(shape) -> bool:
+    return len(shape) >= 2 and shape[-1] > 1 and shape[-2] > 1
+
+
+def adafactor(run: RunConfig) -> Optimizer:
+    lr_fn = cosine_schedule(run.learning_rate, run.warmup_steps, run.total_steps)
+    eps1, eps2, clip_d = 1e-30, 1e-3, 1.0
+    wd = run.weight_decay
+
+    def init(params):
+        def st(p):
+            if _factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "v": jax.tree_util.tree_map(st, params),
+        }
+
+    def update(grads, state, params):
+        grads, _ = clip_by_global_norm(grads, run.grad_clip)
+        step = state["step"] + 1
+        t = step.astype(jnp.float32)
+        lr = lr_fn(step)
+        b2 = 1.0 - t ** -0.8
+
+        def upd(g, s, p):
+            gf = g.astype(jnp.float32)
+            g2 = gf * gf + eps1
+            if _factored(p.shape):
+                vr = b2 * s["vr"] + (1 - b2) * g2.mean(axis=-1)
+                vc = b2 * s["vc"] + (1 - b2) * g2.mean(axis=-2)
+                denom = vr.sum(axis=-1, keepdims=True)
+                vhat = (vr[..., None] * vc[..., None, :]
+                        / jnp.maximum(denom[..., None], eps1))
+                u = gf * jax.lax.rsqrt(jnp.maximum(vhat, eps1))
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = b2 * s["v"] + (1 - b2) * g2
+                u = gf * jax.lax.rsqrt(jnp.maximum(v, eps1))
+                ns = {"v": v}
+            rms_u = jnp.sqrt(jnp.mean(u * u) + eps1)
+            u = u / jnp.maximum(1.0, rms_u / clip_d)
+            pf = p.astype(jnp.float32)
+            scale = jnp.maximum(eps2, jnp.sqrt(jnp.mean(pf * pf)))
+            new_p = pf - lr * scale * u - lr * wd * pf
+            return new_p.astype(p.dtype), ns
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_s = treedef.flatten_up_to(state["v"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, s, p) for g, s, p in zip(flat_g, flat_s, flat_p)]
+        new_p = jax.tree_util.tree_unflatten(treedef, [o[0] for o in out])
+        new_s = jax.tree_util.tree_unflatten(treedef, [o[1] for o in out])
+        return new_p, {"step": step, "v": new_s}
+
+    def state_specs(param_specs):
+        def st(s):
+            if _factored(s.shape):
+                return {
+                    "vr": mod.ParamSpec(s.shape[:-1], jnp.float32,
+                                        s.logical_axes[:-1], ("zeros",)),
+                    "vc": mod.ParamSpec(s.shape[:-2] + s.shape[-1:], jnp.float32,
+                                        s.logical_axes[:-2] + s.logical_axes[-1:],
+                                        ("zeros",)),
+                }
+            return {"v": mod.ParamSpec(s.shape, jnp.float32, s.logical_axes,
+                                       ("zeros",))}
+        return {
+            "step": mod.ParamSpec((), jnp.int32, (), ("zeros",)),
+            "v": jax.tree_util.tree_map(st, param_specs, is_leaf=mod.is_spec),
+        }
+
+    return Optimizer("adafactor", init, update, state_specs)
+
+
+# ---------------------------------------------------------------------------
+# SGD (momentum)
+# ---------------------------------------------------------------------------
+def sgd(run: RunConfig, momentum: float = 0.9) -> Optimizer:
+    lr_fn = cosine_schedule(run.learning_rate, run.warmup_steps, run.total_steps)
+
+    def init(params):
+        return {
+            "step": jnp.zeros((), jnp.int32),
+            "mu": jax.tree_util.tree_map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params),
+        }
+
+    def update(grads, state, params):
+        grads, _ = clip_by_global_norm(grads, run.grad_clip)
+        step = state["step"] + 1
+        lr = lr_fn(step)
+
+        def upd(g, m, p):
+            m = momentum * m + g.astype(jnp.float32)
+            return (p.astype(jnp.float32) - lr * m).astype(p.dtype), m
+
+        flat_g, treedef = jax.tree_util.tree_flatten(grads)
+        flat_m = treedef.flatten_up_to(state["mu"])
+        flat_p = treedef.flatten_up_to(params)
+        out = [upd(g, m, p) for g, m, p in zip(flat_g, flat_m, flat_p)]
+        return (jax.tree_util.tree_unflatten(treedef, [o[0] for o in out]),
+                {"step": step,
+                 "mu": jax.tree_util.tree_unflatten(treedef,
+                                                    [o[1] for o in out])})
+
+    def state_specs(param_specs):
+        return {
+            "step": mod.ParamSpec((), jnp.int32, (), ("zeros",)),
+            "mu": _f32_like_specs(param_specs),
+        }
+
+    return Optimizer("sgd", init, update, state_specs)
+
+
+def make_optimizer(name: str, run: RunConfig) -> Optimizer:
+    if name == "adamw":
+        return adamw(run)
+    if name == "adafactor":
+        return adafactor(run)
+    if name == "sgd":
+        return sgd(run)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,15 @@
+"""Test fixtures. NOTE: no XLA_FLAGS here — tests see the real 1-device
+platform; multi-device behaviour is tested via subprocesses (test_distributed).
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return jax.random.PRNGKey(0)

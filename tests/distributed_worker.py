@@ -1,0 +1,168 @@
+"""Subprocess worker for multi-device tests (run with XLA_FLAGS=8 devices).
+
+Usage: python distributed_worker.py <mode>
+Prints 'PASS <mode>' on success; any exception exits nonzero.
+"""
+import os
+import sys
+
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+from jax import shard_map
+
+from repro.configs import RunConfig, ShapeConfig, get_config
+from repro.core import dappa, proteus
+from repro.core.mimdram import plan_sharding, use_plan
+from repro.data import make_batch_fn
+from repro.launch.steps import (cell_artifacts, make_train_step,
+                                make_train_step_proteus)
+from repro.models import build_model, init_params
+from repro.optim import make_optimizer
+
+MODE = sys.argv[1]
+assert len(jax.devices()) == 8, jax.devices()
+
+
+def almost(a, b, tol=1e-4):
+    a, b = np.asarray(a, np.float64), np.asarray(b, np.float64)
+    assert np.allclose(a, b, rtol=tol, atol=tol), (a, b, np.abs(a - b).max())
+
+
+if MODE == "sharding_invariance":
+    # loss identical on 1 device vs 4x2 mesh with full planner sharding
+    cfg = get_config("internlm2-1.8b", smoke=True)
+    model = build_model(cfg)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    shape = ShapeConfig("t", seq_len=64, global_batch=8, mode="train")
+    batch = {k: jnp.asarray(v) for k, v in make_batch_fn(cfg, shape)(0).items()}
+    loss_1 = jax.jit(model.loss)(params, batch)
+
+    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    plan = plan_sharding(cfg, shape, mesh)
+
+    def loss_fn(p, b):
+        with use_plan(plan):
+            return model.loss(p, b)
+
+    from repro.models import module as mod
+    pspecs = mod.param_pspecs(model.param_specs(), plan)
+    psh = jax.tree_util.tree_map(lambda s: NamedSharding(mesh, s), pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+    params_sh = jax.device_put(params, psh)
+    bsh = {k: jax.device_put(v, NamedSharding(
+        mesh, P("data") if v.ndim == 2 else P("data", None, None)))
+        for k, v in batch.items()}
+    loss_8 = jax.jit(loss_fn)(params_sh, bsh)
+    almost(loss_1, loss_8, 2e-3)
+    print("PASS sharding_invariance")
+
+elif MODE == "dappa_distributed":
+    mesh = jax.make_mesh((8,), ("data",))
+    x = dappa.input_stream("x")
+    y = dappa.input_stream("y")
+    dot = x.zip(y).map(lambda t: t[..., 0] * t[..., 1]).reduce("sum")
+    mov = x.window(4, lambda w: w.max(-1))
+    fm = x.filter(lambda v: v > 0).reduce("mean")
+    fd = dappa.compile_pipeline({"d": dot, "m": mov, "f": fm}, mesh=mesh)
+    fl = dappa.compile_pipeline({"d": dot, "m": mov, "f": fm})
+    xs = jnp.linspace(-3, 3, 64)
+    ys = jnp.linspace(1, 2, 64)
+    od, ol = fd(x=xs, y=ys), fl(x=xs, y=ys)
+    for k in od:
+        almost(od[k], ol[k], 1e-5)
+    print("PASS dappa_distributed")
+
+elif MODE == "proteus_psum":
+    mesh = jax.make_mesh((8,), ("pod",))
+
+    def worker(g):
+        exact = jax.lax.psum(g, "pod")
+        q8 = proteus.proteus_psum(g, "pod", bits=8, block=128)
+        q4 = proteus.proteus_psum(g, "pod", bits=4, block=128)
+        return exact, q8, q4
+
+    g = jax.random.normal(jax.random.PRNGKey(0), (8, 1024), jnp.float32)
+    f = shard_map(worker, mesh=mesh, in_specs=P("pod"),
+                  out_specs=(P("pod"), P("pod"), P("pod")), check_vma=False)
+    exact, q8, q4 = f(g)
+    # error bound: n_dev * scale/2 per element, scale = gmax/qmax per block
+    err8 = np.abs(np.asarray(q8 - exact))
+    err4 = np.abs(np.asarray(q4 - exact))
+    gmax = np.abs(np.asarray(g)).max()
+    assert err8.max() <= 8 * (gmax / 127) / 2 * 1.01 + 1e-6, err8.max()
+    assert err4.max() <= 8 * (gmax / 7) / 2 * 1.01 + 1e-6, err4.max()
+    assert err8.mean() < err4.mean()  # more bits -> tighter
+    print("PASS proteus_psum")
+
+elif MODE == "proteus_train_step":
+    # 2-pod mesh: quantized cross-pod grad reduction trains and tracks baseline
+    cfg = get_config("pimref-100m", smoke=True)
+    model = build_model(cfg)
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    shape = ShapeConfig("t", seq_len=32, global_batch=8, mode="train")
+    plan = plan_sharding(cfg, shape, mesh)
+    run = RunConfig(total_steps=10, microbatches=1, proteus_enabled=True,
+                    proteus_grad_bits=8, proteus_block=128)
+    params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    opt = make_optimizer("sgd", run)
+    ostate = opt.init(params)
+    batch = {k: jnp.asarray(v) for k, v in make_batch_fn(cfg, shape)(0).items()}
+
+    base_step = jax.jit(make_train_step(model, opt, plan, run))
+    prot_step = jax.jit(make_train_step_proteus(model, opt, plan, run))
+    p1, o1, m1 = base_step(params, ostate, batch)
+    p2, o2, m2 = prot_step(params, ostate, batch)
+    almost(m1["loss"], m2["loss"], 1e-3)
+    # parameters close after one step (quantization noise bounded)
+    d = max(float(jnp.abs(a.astype(jnp.float32) - b.astype(jnp.float32)).max())
+            for a, b in zip(jax.tree_util.tree_leaves(p1),
+                            jax.tree_util.tree_leaves(p2)))
+    assert d < 1e-3, d
+    print("PASS proteus_train_step")
+
+elif MODE == "mini_dryrun":
+    # the full dry-run machinery on a (2,2,2) mesh with smoke configs
+    from repro.core import damov
+    for arch in ("internlm2-1.8b", "mixtral-8x7b", "recurrentgemma-2b"):
+        cfg = get_config(arch, smoke=True)
+        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        for mode, seq, gb in (("train", 64, 8), ("decode", 64, 8)):
+            shape = ShapeConfig("t", seq_len=seq, global_batch=gb, mode=mode)
+            plan = plan_sharding(cfg, shape, mesh)
+            model, step, args, shardings, donate, _, out_sh = cell_artifacts(
+                cfg, shape, plan, RunConfig(microbatches=1))
+            c = jax.jit(step, in_shardings=shardings, out_shardings=out_sh,
+                        donate_argnums=donate or None).lower(*args).compile()
+            st = damov.analyze_hlo(c.as_text())
+            assert st.flops > 0
+            assert c.memory_analysis() is not None
+    print("PASS mini_dryrun")
+
+elif MODE == "pipeline":
+    # GPipe over a 2-stage pod axis == sequential stack, bit-for-bit
+    from repro.distributed.pipeline import bubble_fraction, pipelined_forward
+    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    L, D, M, mb = 4, 16, 4, 8
+    key = jax.random.PRNGKey(0)
+    w = jax.random.normal(key, (L, D, D)) * 0.3
+
+    def block(wl, h):
+        return jnp.tanh(h @ wl)
+
+    x = jax.random.normal(jax.random.PRNGKey(1), (M, mb, D))
+    out = jax.jit(lambda w, x: pipelined_forward(
+        block, w, x, mesh=mesh, n_stages=2, n_layers=L))(w, x)
+    ref = x
+    for i in range(L):
+        ref = jnp.tanh(ref @ w[i])
+    almost(out, ref, 1e-5)
+    assert abs(bubble_fraction(2, 4) - 0.2) < 1e-9
+    print("PASS pipeline")
+
+else:
+    raise SystemExit(f"unknown mode {MODE}")

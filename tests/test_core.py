@@ -1,0 +1,176 @@
+"""Unit tests for the four core subsystems (damov/mimdram/proteus/dappa)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import SHAPES_BY_NAME, ShapeConfig, get_config
+from repro.core import damov, dappa, proteus
+from repro.core.mimdram import Plan, plan_sharding, vf_report
+from repro.models.moe import moe_ffn, moe_ffn_ref, moe_param_specs
+from repro.models import module as mod, init_params
+
+
+# ---------------------------------------------------------------------------
+# DAMOV: HLO analyzer
+# ---------------------------------------------------------------------------
+def test_analyzer_counts_scan_trip_counts():
+    def f(x, w):
+        def body(c, wi):
+            return jnp.tanh(c @ wi), None
+        y, _ = jax.lax.scan(body, x, w)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((64, 64), jnp.float32)
+    w = jax.ShapeDtypeStruct((7, 64, 64), jnp.float32)
+    c = jax.jit(f).lower(x, w).compile()
+    st = damov.analyze_hlo(c.as_text())
+    expect = 2 * 7 * 64 ** 3
+    assert 0.95 * expect < st.flops < 1.2 * expect
+    assert 7 in st.trip_counts
+
+
+def test_analyzer_dot_flops_unrolled():
+    def f(a, b):
+        return a @ b
+
+    a = jax.ShapeDtypeStruct((128, 64), jnp.float32)
+    b = jax.ShapeDtypeStruct((64, 32), jnp.float32)
+    c = jax.jit(f).lower(a, b).compile()
+    st = damov.analyze_hlo(c.as_text())
+    assert st.flops == pytest.approx(2 * 128 * 64 * 32, rel=0.01)
+    assert st.n_dots == 1
+
+
+def test_classify():
+    assert damov.classify(1.0, 0.1, 0.1, "train")[1].startswith("MXU")
+    assert damov.classify(0.1, 1.0, 0.1, "train")[1].startswith("MEM_BW")
+    assert damov.classify(0.1, 1.0, 0.1, "decode")[1].startswith("LAT")
+    assert damov.classify(0.1, 0.1, 1.0, "train")[1].startswith("ICI_CONT")
+
+
+def test_shape_bytes_tuple():
+    assert damov._shape_bytes("(f32[2,4]{1,0}, bf16[8])") == 2 * 4 * 4 + 8 * 2
+    assert damov._shape_bytes("s32[]") == 4
+
+
+# ---------------------------------------------------------------------------
+# MIMDRAM: planner
+# ---------------------------------------------------------------------------
+def _fake_mesh_plan(arch, shape_name):
+    # No real 512-device mesh in tests: use mesh=None rules? Planner logic is
+    # mesh-driven; emulate with an abstract mesh via jax.sharding.Mesh over 1
+    # device repeated is impossible — instead test the pure rule logic with a
+    # mesh=None plan and the divisibility helpers directly.
+    return plan_sharding(get_config(arch), SHAPES_BY_NAME[shape_name], None)
+
+
+@pytest.mark.parametrize("arch", ["stablelm-3b", "deepseek-coder-33b",
+                                  "mixtral-8x7b", "kimi-k2-1t-a32b"])
+def test_planner_no_mesh_is_unsharded(arch):
+    plan = _fake_mesh_plan(arch, "train_4k")
+    for axes in plan.rules.values():
+        assert not axes  # nothing sharded without a mesh
+
+
+def test_vf_report():
+    vf = vf_report(get_config("mixtral-8x7b"), SHAPES_BY_NAME["train_4k"])
+    assert vf["experts"] == 8 and vf["batch"] == 256
+
+
+def test_plan_spec_dedups_mesh_axes():
+    plan = Plan(rules={"a": ("data",), "b": ("data",)}, mesh=None)
+    s = plan.spec("a", "b")
+    assert s[0] == "data" and s[1] is None  # axis used once only
+
+
+# ---------------------------------------------------------------------------
+# Proteus: quantization + cost model
+# ---------------------------------------------------------------------------
+def test_quantize_error_bound(rng):
+    x = jax.random.normal(rng, (1024,), jnp.float32) * 10
+    qt = proteus.quantize(x, bits=8, block=256)
+    y = proteus.dequantize(qt)
+    scale_per_elem = np.repeat(np.asarray(qt.scale), 256)[:1024]
+    err = np.abs(np.asarray(y) - np.asarray(x))
+    assert (err <= scale_per_elem / 2 + 1e-7).all()
+
+
+def test_quantize_shapes_and_payload(rng):
+    x = jax.random.normal(rng, (37, 19), jnp.float32)
+    qt = proteus.quantize(x, bits=8, block=128)
+    assert proteus.dequantize(qt).shape == (37, 19)
+    assert qt.nbytes_payload < x.size * 4  # compressed vs fp32
+
+
+def test_narrow_required_bits_int():
+    assert int(proteus.required_bits_int(jnp.array([0, 0]))) == 1
+    assert int(proteus.required_bits_int(jnp.array([3]))) == 3
+    assert int(proteus.required_bits_int(jnp.array([-129]))) == 9
+
+
+def test_cost_model_selects_narrow_for_large_payloads():
+    cm = proteus.CostModel()
+    big = cm.select(100_000_000, err_budget=1e-2)
+    small = cm.select(1_000, err_budget=1e-2)
+    assert big.bits < 16          # narrow format wins on the wire
+    assert small.bits >= big.bits  # latency-oriented pick for small payloads
+
+
+def test_cost_model_respects_error_budget():
+    cm = proteus.CostModel()
+    assert cm.select(10 ** 9, err_budget=1e-6).name == "bf16"
+
+
+def test_bucketize(rng):
+    tree = {"a": jnp.zeros((1024, 256)), "b": jnp.zeros((8,)),
+            "c": jnp.zeros((2048, 512))}
+    buckets = proteus.bucketize(tree, bucket_bytes=1 << 20)
+    total = sum(len(b) for b in buckets)
+    assert total == 3 and len(buckets) >= 2
+
+
+# ---------------------------------------------------------------------------
+# DaPPA: pattern semantics (local lowering; distributed in test_distributed)
+# ---------------------------------------------------------------------------
+def test_dappa_map_reduce(rng):
+    x = dappa.input_stream("x")
+    f = dappa.compile_pipeline(x.map(lambda v: v * 2).reduce("sum"))
+    xs = jnp.arange(16.0)
+    assert float(f(x=xs)) == float(2 * xs.sum())
+
+
+def test_dappa_zip_filter_mean(rng):
+    x, y = dappa.input_stream("x"), dappa.input_stream("y")
+    prod = x.zip(y).map(lambda t: t[..., 0] * t[..., 1])
+    pos_mean = prod.filter(lambda v: v > 0).reduce("mean")
+    f = dappa.compile_pipeline(pos_mean)
+    xs = jnp.arange(-4.0, 4.0)
+    ys = jnp.ones((8,)) * 2
+    ref = np.asarray(xs * 2)
+    assert float(f(x=xs, y=ys)) == pytest.approx(ref[ref > 0].mean())
+
+
+def test_dappa_window():
+    x = dappa.input_stream("x")
+    f = dappa.compile_pipeline(x.window(3, lambda w: w.sum(-1)))
+    xs = jnp.arange(8.0)
+    out = np.asarray(f(x=xs))
+    ref = np.convolve(np.arange(8.0), np.ones(3), mode="valid")
+    np.testing.assert_allclose(out[:6], ref)
+    assert (out[6:] == 0).all()  # masked tail filled
+
+
+# ---------------------------------------------------------------------------
+# MoE: scatter implementation vs dense oracle
+# ---------------------------------------------------------------------------
+def test_moe_matches_dense_oracle(rng):
+    cfg = get_config("mixtral-8x7b", smoke=True).replace(capacity_factor=8.0)
+    specs = moe_param_specs(cfg, jnp.float32)
+    p = init_params(specs, rng)
+    x = jax.random.normal(jax.random.PRNGKey(3), (2, 16, cfg.d_model),
+                          jnp.float32)
+    out = moe_ffn(cfg, p, x)
+    ref = moe_ffn_ref(cfg, p, x)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-4, rtol=2e-3)

@@ -1,0 +1,65 @@
+"""Flash custom-VJP attention: forward + gradients vs the quadratic oracle,
+including the static block-skip schedule (beyond-paper §Perf C1/B2)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.damov import analyze_hlo
+from repro.models.layers import (attention_ref, chunked_attention,
+                                 flash_attention_jnp)
+
+
+@pytest.mark.parametrize("win,cap", [(0, 0.0), (64, 0.0), (0, 30.0)])
+@pytest.mark.parametrize("block_skip", [False, True])
+def test_flash_vjp_grads_match_oracle(win, cap, block_skip, rng):
+    B, S, Hq, Hkv, D = 2, 256, 4, 2, 32
+    ks = jax.random.split(rng, 4)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    do = jax.random.normal(ks[3], (B, S, Hq, D))
+
+    def f(q, k, v):
+        o = chunked_attention(q, k, v, causal=True, window=win,
+                              attn_softcap=cap, chunk_q=64, chunk_kv=64,
+                              block_skip=block_skip)
+        return (o * do).sum()
+
+    def g(q, k, v):
+        return (attention_ref(q, k, v, causal=True, window=win,
+                              attn_softcap=cap) * do).sum()
+
+    o1 = chunked_attention(q, k, v, causal=True, window=win, attn_softcap=cap,
+                           chunk_q=64, chunk_kv=64, block_skip=block_skip)
+    o2 = attention_ref(q, k, v, causal=True, window=win, attn_softcap=cap)
+    np.testing.assert_allclose(np.asarray(o1), np.asarray(o2), atol=2e-5)
+    g1 = jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+    g2 = jax.grad(g, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(g1, g2):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_block_skip_halves_hlo_flops():
+    """The §Perf C1 claim: causal skip does ~(nq+1)/2nq of the full work."""
+    q = jax.ShapeDtypeStruct((1, 2048, 4, 1, 64), jnp.float32)
+    kv = jax.ShapeDtypeStruct((1, 2048, 4, 64), jnp.float32)
+    fl = {}
+    for bs in (False, True):
+        c = jax.jit(lambda a, b, d: flash_attention_jnp(
+            a, b, d, True, 0, 0.0, 256, 256, bs)).lower(q, kv, kv).compile()
+        fl[bs] = analyze_hlo(c.as_text()).flops
+    nq = 2048 // 256
+    expect = (nq + 1) / (2 * nq)
+    assert fl[True] / fl[False] == pytest.approx(expect, rel=0.1)
+
+
+def test_flash_lse_is_finite(rng):
+    """Fully-masked rows (window smaller than chunk) stay finite."""
+    q = jax.random.normal(rng, (1, 128, 2, 1, 16))
+    kv = jax.random.normal(rng, (1, 128, 2, 16))
+    out = flash_attention_jnp(q, kv, kv, True, 8, 0.0, 64, 64, False)
+    assert bool(jnp.isfinite(out.astype(jnp.float32)).all())
+    g = jax.grad(lambda q: flash_attention_jnp(
+        q, kv, kv, True, 8, 0.0, 64, 64, False).sum())(q)
+    assert bool(jnp.isfinite(g.astype(jnp.float32)).all())

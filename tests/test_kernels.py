@@ -1,0 +1,133 @@
+"""Per-kernel validation: shape/dtype sweeps, assert_allclose vs ref oracles.
+
+All kernels run in interpret mode (CPU container; TPU is the target).
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref_bh
+from repro.kernels.narrow_value import (pack_int4, pack_int4_ref,
+                                        required_bits, required_bits_ref,
+                                        unpack_int4, unpack_int4_ref)
+from repro.kernels.quant_matmul import (quant_matmul, quant_matmul_ref,
+                                        quantize_weights)
+from repro.kernels.rglru import rglru_scan, rglru_scan_ref
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,S,T,Hq,Hkv,D", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 256, 256, 4, 2, 64),
+    (1, 128, 256, 4, 1, 32),     # MQA, cross-length
+    (1, 256, 256, 8, 8, 128),
+])
+@pytest.mark.parametrize("causal,window", [(True, 0), (True, 64), (False, 0)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention(B, S, T, Hq, Hkv, D, causal, window, dtype, rng):
+    if causal and T != S:
+        pytest.skip("causal requires square here")
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, T, Hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, T, Hkv, D)).astype(dtype)
+    out = flash_attention(q, k, v, causal=causal, window=window,
+                          interpret=True)
+    G = Hq // Hkv
+    qr = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
+    kr = jnp.repeat(k, G, 2).transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
+    vr = jnp.repeat(v, G, 2).transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
+    ref = attention_ref_bh(qr, kr, vr, causal=causal, window=window)
+    ref = ref.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=tol, rtol=tol)
+
+
+def test_flash_attention_blocks(rng):
+    """Result independent of block sizes."""
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    a = flash_attention(q, k, v, block_q=128, block_k=128, interpret=True)
+    b = flash_attention(q, k, v, block_q=64, block_k=256, interpret=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# quant matmul
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("M,K,N", [(128, 128, 128), (256, 512, 128),
+                                   (128, 384, 256)])
+@pytest.mark.parametrize("bits", [8, 4])
+def test_quant_matmul(M, K, N, bits, rng):
+    ks = jax.random.split(rng, 2)
+    x = jax.random.normal(ks[0], (M, K), jnp.float32)
+    w = jax.random.normal(ks[1], (K, N), jnp.float32)
+    codes, scales = quantize_weights(w, block_k=128, bits=bits)
+    out = quant_matmul(x, codes, scales, interpret=True)
+    ref = quant_matmul_ref(x, codes, scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-3, rtol=1e-4)
+    # quantized result approximates the exact matmul within format error
+    exact = np.asarray(x @ w)
+    rel = np.abs(np.asarray(ref) - exact).max() / np.abs(exact).max()
+    assert rel < (0.02 if bits == 8 else 0.25)
+
+
+def test_quant_matmul_dtypes(rng):
+    ks = jax.random.split(rng, 2)
+    x = jax.random.normal(ks[0], (128, 128), jnp.float32).astype(jnp.bfloat16)
+    w = jax.random.normal(ks[1], (128, 128), jnp.float32)
+    codes, scales = quantize_weights(w)
+    out = quant_matmul(x, codes, scales, interpret=True)
+    ref = quant_matmul_ref(x.astype(jnp.float32), codes, scales)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=0.5,
+                               rtol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# narrow value
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("n,block", [(512, 256), (2048, 256), (1024, 128)])
+def test_required_bits(n, block, rng):
+    x = jax.random.randint(rng, (n,), -100000, 100000, jnp.int32)
+    out = required_bits(x, block, interpret=True)
+    ref = required_bits_ref(x, block)
+    assert (np.asarray(out) == np.asarray(ref)).all()
+
+
+def test_required_bits_narrow(rng):
+    x = jnp.zeros((512,), jnp.int32).at[0].set(3)  # narrow: fits in 3 bits
+    out = required_bits(x, 256, interpret=True)
+    assert int(out[0]) == 3 and int(out[1]) == 1
+
+
+@pytest.mark.parametrize("n", [512, 1024, 4096])
+def test_int4_roundtrip(n, rng):
+    v = jax.random.randint(rng, (n,), -8, 8, jnp.int32).astype(jnp.int8)
+    p = pack_int4(v, interpret=True)
+    assert p.shape == (n // 2,)
+    u = unpack_int4(p, interpret=True)
+    assert (np.asarray(u) == np.asarray(v)).all()
+    assert (np.asarray(p) == np.asarray(pack_int4_ref(v))).all()
+    assert (np.asarray(unpack_int4_ref(p)) == np.asarray(v)).all()
+
+
+# ---------------------------------------------------------------------------
+# rglru
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("B,T,D,bt", [(1, 256, 64, 128), (2, 512, 128, 128),
+                                      (1, 128, 256, 64)])
+def test_rglru_scan(B, T, D, bt, rng):
+    ks = jax.random.split(rng, 2)
+    a = jax.random.uniform(ks[0], (B, T, D), jnp.float32, 0.7, 0.999)
+    b = jax.random.normal(ks[1], (B, T, D), jnp.float32) * 0.1
+    out = rglru_scan(a, b, block_t=bt, interpret=True)
+    ref = rglru_scan_ref(a, b)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4)

@@ -1,0 +1,117 @@
+"""Hypothesis property tests on system invariants."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.configs.base import ModelConfig, ShapeConfig
+from repro.core import proteus
+from repro.core.mimdram import plan_sharding
+from repro.data.pipeline import SyntheticLMDataset, pack_documents
+from repro.kernels.narrow_value.ref import (pack_int4_ref, required_bits_ref,
+                                            unpack_int4_ref)
+
+COMMON = dict(deadline=None, max_examples=25)
+
+
+# ---------------------------------------------------------------------------
+# Proteus representation properties
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 2 ** 31 - 2))
+@settings(**COMMON)
+def test_required_bits_int_formula(v):
+    bits = int(proteus.required_bits_int(jnp.array([v], jnp.int32)))
+    if v == 0:
+        assert bits == 1
+    else:
+        assert 2 ** (bits - 1) - 1 >= v        # representable
+        assert bits <= 2 or 2 ** (bits - 2) - 1 < v  # minimal
+
+
+@given(st.lists(st.integers(-8, 7), min_size=2, max_size=64)
+       .filter(lambda l: len(l) % 2 == 0))
+@settings(**COMMON)
+def test_int4_pack_roundtrip_exact(vals):
+    v = jnp.asarray(vals, jnp.int8)
+    assert (np.asarray(unpack_int4_ref(pack_int4_ref(v)))
+            == np.asarray(v)).all()
+
+
+@given(st.integers(0, 6), st.sampled_from([4, 8]),
+       st.sampled_from([64, 128, 256]))
+@settings(**COMMON)
+def test_quantize_error_bound_property(seed, bits, block):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (512,), jnp.float32) \
+        * (10 ** (seed % 4))
+    qt = proteus.quantize(x, bits=bits, block=block)
+    y = proteus.dequantize(qt)
+    scale = np.repeat(np.asarray(qt.scale), block)[:512]
+    assert (np.abs(np.asarray(y - x)) <= scale / 2 * 1.001 + 1e-9).all()
+
+
+@given(st.integers(1, 10 ** 9), st.floats(1e-6, 0.5))
+@settings(**COMMON)
+def test_cost_model_total_order(n, budget):
+    cm = proteus.CostModel()
+    rep = cm.select(n, budget)
+    assert rep.rel_err <= budget or rep.name == "bf16"
+    # latency must be minimal among feasible
+    for r in proteus.REPRESENTATIONS:
+        if r.rel_err <= budget:
+            assert cm.latency(n, rep) <= cm.latency(n, r) + 1e-12
+
+
+# ---------------------------------------------------------------------------
+# Planner properties: every assignment divides
+# ---------------------------------------------------------------------------
+ARCH_DIMS = st.fixed_dictionaries({
+    "num_layers": st.sampled_from([2, 4]),
+    "d_model": st.sampled_from([64, 128, 192]),
+    "num_heads": st.sampled_from([2, 4, 6, 7]),
+    "num_kv_heads": st.sampled_from([1, 2]),
+    "d_ff": st.sampled_from([128, 192, 256]),
+    "vocab_size": st.sampled_from([256, 100, 512]),
+})
+
+
+@given(ARCH_DIMS, st.sampled_from([(8, 128), (256, 4096), (1, 1024)]))
+@settings(**COMMON)
+def test_planner_rules_always_divisible(dims, bs):
+    if dims["num_heads"] % dims["num_kv_heads"]:
+        dims["num_kv_heads"] = 1
+    cfg = ModelConfig(name="t", family="dense", **dims)
+    gb, seq = bs
+    shape = ShapeConfig("t", seq_len=seq, global_batch=gb, mode="train")
+    plan = plan_sharding(cfg, shape, None)   # mesh-free: no crash, no rules
+    assert all(not v for v in plan.rules.values())
+    # dimension bookkeeping (mesh-full case covered in test_distributed via
+    # subprocess): rule map covers every logical axis used by models
+    for axis in ("embed", "mlp", "heads", "kv", "vocab", "act_batch"):
+        assert axis in plan.rules
+
+
+# ---------------------------------------------------------------------------
+# Data pipeline properties
+# ---------------------------------------------------------------------------
+@given(st.integers(0, 10 ** 6), st.integers(0, 5))
+@settings(**COMMON)
+def test_batch_determinism(step, seed):
+    ds1 = SyntheticLMDataset(256, 32, 4, seed=seed)
+    ds2 = SyntheticLMDataset(256, 32, 4, seed=seed)
+    b1, b2 = ds1.batch(step), ds2.batch(step)
+    assert (b1["tokens"] == b2["tokens"]).all()
+    assert b1["tokens"].shape == (4, 32)
+    assert (b1["tokens"] >= 0).all() and (b1["tokens"] < 256).all()
+
+
+@given(st.lists(st.lists(st.integers(1, 99), min_size=1, max_size=30),
+                min_size=1, max_size=10),
+       st.sampled_from([16, 32]))
+@settings(**COMMON)
+def test_pack_documents_conservation(docs, seq_len):
+    rows, masks = pack_documents(docs, seq_len)
+    assert rows.shape == masks.shape
+    assert rows.shape[1] == seq_len
+    # every in-document token position survives exactly once
+    n_doc_tokens = sum(len(d) for d in docs)
+    assert int(masks.sum()) == n_doc_tokens
