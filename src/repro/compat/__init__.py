@@ -1,0 +1,34 @@
+"""Version-adaptive JAX shims — the only sanctioned import path for
+version-sensitive JAX symbols (see jax_compat.py for the support matrix)."""
+from repro.compat.jax_compat import (  # noqa: F401
+    HAS_DIFFERENTIABLE_BARRIER,
+    HAS_NATIVE_AXIS_TYPE,
+    HAS_NATIVE_MAKE_MESH,
+    HAS_NATIVE_SHARD_MAP,
+    HAS_PARTIAL_MANUAL_SHARD_MAP,
+    JAX_VERSION,
+    AxisType,
+    abstract_mesh,
+    axis_size,
+    context_mesh,
+    current_axis_types,
+    describe_support,
+    import_pallas,
+    import_pallas_tpu,
+    in_manual_context,
+    is_manual_axis,
+    make_mesh,
+    manual_axis_names,
+    optimization_barrier,
+    pallas_call,
+    shard_map,
+    tree_all,
+    tree_flatten,
+    tree_leaves,
+    tree_map,
+    tree_reduce,
+    tree_structure,
+    tree_unflatten,
+)
+
+from repro.compat.jax_compat import __all__  # noqa: F401

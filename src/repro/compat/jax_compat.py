@@ -1,0 +1,474 @@
+"""Version-adaptive JAX compatibility layer.
+
+Everything in this repo that touches a JAX API whose spelling changed between
+JAX generations goes through this module — the same way the thesis' system
+support hides PIM hardware-generation differences from programmers, this shim
+hides JAX-generation differences from every kernel, model, and launch path.
+New code MUST import version-sensitive symbols from ``repro.compat`` only
+(enforced by tests/test_compat.py and CI).
+
+Support matrix (selected at import time):
+
+  symbol / behaviour        JAX 0.4.x (>= 0.4.35)            JAX >= 0.5
+  ------------------------  -------------------------------  -----------------------------
+  shard_map                 jax.experimental.shard_map       jax.shard_map
+    partial-manual axes     auto= (complement of manual      axis_names= (the manual set)
+                            set; jit-only — the 0.4.x
+                            eager impl raises
+                            NotImplementedError)
+    replication check flag  check_rep=                       check_vma=
+  AxisType                  local enum stub (Auto/           jax.sharding.AxisType
+                            Explicit/Manual)
+  make_mesh                 jax.make_mesh (axis_types        jax.make_mesh
+                            kwarg dropped); pre-0.4.35
+                            fallback via mesh_utils
+  manual-axis detection     thread-local recorded by this    jax.sharding.get_abstract_mesh()
+    (is_manual_axis, ...)   module's shard_map wrapper at      .axis_types, with the same
+                            trace time (0.4.x tracing only     thread-local as tie-breaker
+                            exposes manual axes through        for exact nested-context
+                            SPMDAxisContext at lowering,       info
+                            too late for trace-time policy)
+  pallas entry points       jax.experimental.pallas(+.tpu)   same (re-exported lazily)
+  tree utilities            jax.tree.* with jax.tree_util    jax.tree.*
+                            fallback
+
+Known 0.4.x behaviour change: a partial-manual ``shard_map`` (``axis_names``
+a strict subset of the mesh axes) is *promoted to fully-manual* there — the
+0.4.x jaxlib SPMD partitioner hard-crashes on manual-subgroup modules and
+the eager ``auto=`` path is unimplemented upstream. See the
+``HAS_PARTIAL_MANUAL_SHARD_MAP`` note below for the exact conditions and
+cost.
+"""
+from __future__ import annotations
+
+import contextlib
+import enum
+import functools
+import inspect
+import re as _re
+import threading
+from typing import Any, Callable, Dict, FrozenSet, Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = [
+    "JAX_VERSION",
+    "HAS_NATIVE_SHARD_MAP",
+    "HAS_NATIVE_AXIS_TYPE",
+    "HAS_NATIVE_MAKE_MESH",
+    "HAS_PARTIAL_MANUAL_SHARD_MAP",
+    "HAS_DIFFERENTIABLE_BARRIER",
+    "optimization_barrier",
+    "axis_size",
+    "AxisType",
+    "shard_map",
+    "make_mesh",
+    "abstract_mesh",
+    "context_mesh",
+    "manual_axis_names",
+    "current_axis_types",
+    "is_manual_axis",
+    "in_manual_context",
+    "import_pallas",
+    "import_pallas_tpu",
+    "pallas_call",
+    "tree_map",
+    "tree_leaves",
+    "tree_flatten",
+    "tree_unflatten",
+    "tree_structure",
+    "tree_reduce",
+    "tree_all",
+    "describe_support",
+]
+
+
+def _parse_version(v: str) -> Tuple[int, ...]:
+    """Leading numeric release components only ('0.5.0rc1' -> (0, 5, 0))."""
+    parts = []
+    for p in v.split("."):
+        m = _re.match(r"\d+", p)
+        if m is None:
+            break
+        parts.append(int(m.group()))
+        if m.group() != p:  # mixed part like '0rc1': stop after its number
+            break
+    return tuple(parts[:3])
+
+
+JAX_VERSION: Tuple[int, ...] = _parse_version(jax.__version__)
+
+# ---------------------------------------------------------------------------
+# AxisType
+# ---------------------------------------------------------------------------
+try:  # >= 0.5 public spelling
+    from jax.sharding import AxisType  # type: ignore[attr-defined]
+
+    HAS_NATIVE_AXIS_TYPE = True
+except ImportError:
+    HAS_NATIVE_AXIS_TYPE = False
+
+    class AxisType(enum.Enum):  # type: ignore[no-redef]
+        """Stub of jax.sharding.AxisType for JAX < 0.5."""
+
+        Auto = enum.auto()
+        Explicit = enum.auto()
+        Manual = enum.auto()
+
+
+# ---------------------------------------------------------------------------
+# shard_map: one spelling for every JAX generation
+# ---------------------------------------------------------------------------
+HAS_NATIVE_SHARD_MAP = hasattr(jax, "shard_map")
+if HAS_NATIVE_SHARD_MAP:
+    _raw_shard_map = jax.shard_map  # type: ignore[attr-defined]
+else:
+    from jax.experimental.shard_map import shard_map as _raw_shard_map
+
+_RAW_PARAMS = frozenset(inspect.signature(_raw_shard_map).parameters)
+
+# Partial-manual (a strict subset of mesh axes manual, the rest left to
+# GSPMD) is only dependable from 0.5 on: the 0.4.x jaxlib SPMD partitioner
+# hard-CHECK-fails (process abort) on many manual-subgroup modules
+# (spmd_partitioner.cc / hlo_sharding_util.cc), and the eager interpreter
+# path raises NotImplementedError. On 0.4.x this shim therefore *promotes*
+# partial-manual maps to fully-manual — legal whenever no in/out spec
+# mentions an auto axis and the body only issues collectives over its manual
+# axes (both true throughout this repo; the spec condition is verified at
+# call time). The cost is that GSPMD no longer distributes the body over the
+# auto axes on 0.4.x (redundant replicated compute there); semantics and
+# results are unchanged.
+HAS_PARTIAL_MANUAL_SHARD_MAP = JAX_VERSION >= (0, 5)
+
+# Thread-local stack of (abstract mesh, frozenset(manual axis names)),
+# pushed while the body of a compat shard_map is being traced. This is the
+# 0.4.x source of truth for manual-axis queries (the tracing axis env binds
+# auto axes too, so it cannot distinguish manual from auto there).
+_trace_ctx = threading.local()
+
+
+def _ctx_stack():
+    stack = getattr(_trace_ctx, "stack", None)
+    if stack is None:
+        stack = _trace_ctx.stack = []
+    return stack
+
+
+@contextlib.contextmanager
+def _recording_manual(mesh, manual: FrozenSet[str]):
+    stack = _ctx_stack()
+    stack.append((abstract_mesh(mesh), manual))
+    try:
+        yield
+    finally:
+        stack.pop()
+
+
+def _spec_axis_names(specs) -> FrozenSet[str]:
+    """Every mesh axis name mentioned anywhere in a pytree of PartitionSpecs."""
+    from jax.sharding import PartitionSpec  # noqa: PLC0415
+
+    names: set = set()
+    leaves = jax.tree_util.tree_leaves(
+        specs, is_leaf=lambda x: isinstance(x, PartitionSpec))
+    for leaf in leaves:
+        if not isinstance(leaf, PartitionSpec):
+            continue
+        for entry in leaf:
+            if entry is None:
+                continue
+            if isinstance(entry, (tuple, list)):
+                names.update(entry)
+            else:
+                names.add(entry)
+    return frozenset(names)
+
+
+def shard_map(
+    f: Callable,
+    mesh=None,
+    in_specs: Any = None,
+    out_specs: Any = None,
+    *,
+    axis_names: Optional[FrozenSet[str]] = None,
+    check_vma: Optional[bool] = None,
+    check_rep: Optional[bool] = None,
+    auto: Optional[FrozenSet[str]] = None,
+):
+    """Normalized shard_map across JAX generations.
+
+    ``axis_names`` is the >=0.5 spelling: the set of mesh axes that are
+    *manual* inside ``f`` (omitted = all axes manual). ``auto`` (the 0.4.x
+    spelling: the complement) is accepted for symmetry; pass at most one.
+    ``check_vma`` / ``check_rep`` are the same flag under its new / old name.
+    """
+    if mesh is None:
+        raise TypeError("shard_map: mesh is required")
+    all_axes = frozenset(mesh.axis_names)
+    if axis_names is not None and auto is not None:
+        raise TypeError("shard_map: pass axis_names or auto, not both")
+    if axis_names is not None:
+        manual = frozenset(axis_names)
+    elif auto is not None:
+        manual = all_axes - frozenset(auto)
+    else:
+        manual = all_axes
+    if not manual <= all_axes:
+        raise ValueError(
+            f"shard_map: manual axes {sorted(manual)} not a subset of mesh "
+            f"axes {sorted(all_axes)}")
+    if manual != all_axes and not HAS_PARTIAL_MANUAL_SHARD_MAP:
+        offending = (_spec_axis_names(in_specs)
+                     | _spec_axis_names(out_specs)) & (all_axes - manual)
+        if offending:
+            raise NotImplementedError(
+                f"jax {jax.__version__} cannot partition partial-manual "
+                f"shard_map whose specs mention auto axes {sorted(offending)}"
+                " (the 0.4.x fully-manual promotion needs specs confined to "
+                "the manual axes)")
+        manual = all_axes  # promote: see HAS_PARTIAL_MANUAL_SHARD_MAP note
+    check = True
+    if check_vma is not None:
+        check = check_vma
+    elif check_rep is not None:
+        check = check_rep
+
+    @functools.wraps(f)
+    def traced(*args, **kwargs):
+        with _recording_manual(mesh, manual):
+            return f(*args, **kwargs)
+
+    kw: Dict[str, Any] = {"mesh": mesh, "in_specs": in_specs,
+                          "out_specs": out_specs}
+    if "check_vma" in _RAW_PARAMS:
+        kw["check_vma"] = check
+    elif "check_rep" in _RAW_PARAMS:
+        kw["check_rep"] = check
+    if manual != all_axes:
+        if "axis_names" in _RAW_PARAMS:
+            kw["axis_names"] = set(manual)
+        elif "auto" in _RAW_PARAMS:
+            kw["auto"] = all_axes - manual
+        else:  # pragma: no cover - no partial-manual support at all
+            raise NotImplementedError(
+                f"installed jax {jax.__version__} shard_map supports neither "
+                "axis_names= nor auto=; partial-manual maps unavailable")
+    return _raw_shard_map(traced, **kw)
+
+
+# ---------------------------------------------------------------------------
+# Mesh construction
+# ---------------------------------------------------------------------------
+_native_make_mesh = getattr(jax, "make_mesh", None)
+HAS_NATIVE_MAKE_MESH = _native_make_mesh is not None
+_MM_PARAMS = (frozenset(inspect.signature(_native_make_mesh).parameters)
+              if HAS_NATIVE_MAKE_MESH else frozenset())
+
+
+def make_mesh(axis_shapes: Sequence[int], axis_names: Sequence[str], *,
+              devices=None, axis_types=None) -> Mesh:
+    """jax.make_mesh across generations.
+
+    ``axis_types`` is honoured when the installed JAX understands it
+    (>= 0.5) and silently dropped otherwise — 0.4.x meshes are untyped and
+    axis-type policy is carried by this module's shard_map wrapper instead.
+    """
+    if HAS_NATIVE_MAKE_MESH:
+        kw: Dict[str, Any] = {}
+        if devices is not None:
+            kw["devices"] = devices
+        if axis_types is not None and "axis_types" in _MM_PARAMS:
+            kw["axis_types"] = axis_types
+        return _native_make_mesh(tuple(axis_shapes), tuple(axis_names), **kw)
+    from jax.experimental import mesh_utils  # noqa: PLC0415
+
+    devs = mesh_utils.create_device_mesh(tuple(axis_shapes), devices=devices)
+    return Mesh(devs, tuple(axis_names))
+
+
+def abstract_mesh(mesh):
+    """The AbstractMesh view of a (possibly already abstract) mesh."""
+    if mesh is None:
+        return None
+    if isinstance(mesh, Mesh):
+        return getattr(mesh, "abstract_mesh", mesh)
+    return mesh  # already abstract
+
+
+# ---------------------------------------------------------------------------
+# Trace-context queries (manual-axis detection)
+# ---------------------------------------------------------------------------
+def _native_context() -> Optional[Tuple[Any, FrozenSet[str]]]:
+    get = getattr(jax.sharding, "get_abstract_mesh", None)
+    if get is None:
+        return None
+    m = get()
+    if m is None or getattr(m, "empty", True):
+        return None
+    types = getattr(m, "axis_types", None) or ()
+    manual = frozenset(
+        n for n, t in zip(m.axis_names, types)
+        if t == getattr(AxisType, "Manual", None))
+    return m, manual
+
+
+def context_mesh():
+    """Innermost shard_map's (abstract) mesh, or None outside any."""
+    stack = getattr(_trace_ctx, "stack", None)
+    if stack:
+        return stack[-1][0]
+    native = _native_context()
+    return native[0] if native else None
+
+
+def manual_axis_names() -> FrozenSet[str]:
+    """Mesh axes that are Manual in the current tracing context."""
+    stack = getattr(_trace_ctx, "stack", None)
+    if stack:
+        return stack[-1][1]
+    native = _native_context()
+    return native[1] if native else frozenset()
+
+
+def current_axis_types() -> Dict[str, "AxisType"]:
+    """{axis name: AxisType} for the current context mesh ({} outside)."""
+    mesh = context_mesh()
+    if mesh is None:
+        return {}
+    manual = manual_axis_names()
+    return {n: (AxisType.Manual if n in manual else AxisType.Auto)
+            for n in mesh.axis_names}
+
+
+def is_manual_axis(name: Optional[str] = None) -> bool:
+    """Is ``name`` (or, with None, *any* axis) Manual in the current context?"""
+    manual = manual_axis_names()
+    return bool(manual) if name is None else name in manual
+
+
+def in_manual_context() -> bool:
+    """True inside a shard_map body with at least one manual axis.
+
+    Model/planner code uses this to skip ``with_sharding_constraint`` —
+    under a (partial-)manual map XLA's SPMD partitioner CHECK-fails on many
+    constraint/reshard patterns (spmd_partitioner_util.cc), so GSPMD must
+    propagate freely there.
+    """
+    return is_manual_axis(None)
+
+
+# ---------------------------------------------------------------------------
+# Collective helpers
+# ---------------------------------------------------------------------------
+_native_axis_size = getattr(jax.lax, "axis_size", None)
+
+
+def axis_size(axis_name) -> int:
+    """jax.lax.axis_size across generations (0.4.x lacks it).
+
+    The psum-of-1 fallback is the classic spelling: a literal reduced over a
+    named axis folds to the axis extent at trace time.
+    """
+    if _native_axis_size is not None:
+        return _native_axis_size(axis_name)
+    return jax.lax.psum(1, axis_name)
+
+
+# ---------------------------------------------------------------------------
+# optimization_barrier (differentiable on every supported JAX)
+# ---------------------------------------------------------------------------
+def _probe_differentiable_barrier() -> bool:
+    try:  # trace-only: no compile, no execution
+        jax.make_jaxpr(jax.grad(
+            lambda x: jax.lax.optimization_barrier(x)))(1.0)
+        return True
+    except NotImplementedError:
+        return False
+
+
+HAS_DIFFERENTIABLE_BARRIER = _probe_differentiable_barrier()
+
+if HAS_DIFFERENTIABLE_BARRIER:
+    optimization_barrier = jax.lax.optimization_barrier
+else:
+    # 0.4.x lacks the differentiation rule upstream; mirror the later-JAX
+    # semantics (barrier the cotangents too) via custom_vjp.
+    @jax.custom_vjp
+    def optimization_barrier(x):
+        return jax.lax.optimization_barrier(x)
+
+    def _barrier_fwd(x):
+        return jax.lax.optimization_barrier(x), None
+
+    def _barrier_bwd(_, g):
+        def leaf(ct):
+            dt = getattr(ct, "dtype", None)
+            if dt is not None and dt == jax.dtypes.float0:
+                return ct  # no barrier on symbolic zero cotangents
+            return jax.lax.optimization_barrier(ct)
+
+        return (jax.tree_util.tree_map(leaf, g),)
+
+    optimization_barrier.defvjp(_barrier_fwd, _barrier_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pallas entry points
+# ---------------------------------------------------------------------------
+def import_pallas():
+    """The pallas module (jax.experimental.pallas on every supported JAX)."""
+    from jax.experimental import pallas as pl  # noqa: PLC0415
+
+    return pl
+
+
+def import_pallas_tpu():
+    """The TPU pallas namespace, or None when this install lacks it."""
+    try:
+        from jax.experimental.pallas import tpu as pltpu  # noqa: PLC0415
+
+        return pltpu
+    except ImportError:
+        return None
+
+
+def pallas_call(*args, **kwargs):
+    """Late-bound pl.pallas_call (resolves against the installed pallas)."""
+    return import_pallas().pallas_call(*args, **kwargs)
+
+
+# ---------------------------------------------------------------------------
+# Tree utilities (jax.tree.* newer spelling, jax.tree_util fallback)
+# ---------------------------------------------------------------------------
+_tree_ns = getattr(jax, "tree", None)
+
+
+def _tree(fn_new: str, fn_old: str):
+    fn = getattr(_tree_ns, fn_new, None) if _tree_ns is not None else None
+    return fn if fn is not None else getattr(jax.tree_util, fn_old)
+
+
+tree_map = _tree("map", "tree_map")
+tree_leaves = _tree("leaves", "tree_leaves")
+tree_flatten = _tree("flatten", "tree_flatten")
+tree_unflatten = _tree("unflatten", "tree_unflatten")
+tree_structure = _tree("structure", "tree_structure")
+tree_reduce = _tree("reduce", "tree_reduce")
+tree_all = _tree("all", "tree_all")
+
+
+# ---------------------------------------------------------------------------
+# Diagnostics
+# ---------------------------------------------------------------------------
+def describe_support() -> str:
+    """One-line banner of which implementation paths this install selected."""
+    return (
+        f"repro.compat: jax {jax.__version__} | "
+        f"shard_map={'jax.shard_map' if HAS_NATIVE_SHARD_MAP else 'jax.experimental.shard_map'} | "
+        f"AxisType={'native' if HAS_NATIVE_AXIS_TYPE else 'stub'} | "
+        f"make_mesh={'native' if HAS_NATIVE_MAKE_MESH else 'mesh_utils'} | "
+        f"partial-manual={'native' if HAS_PARTIAL_MANUAL_SHARD_MAP else 'promoted-to-full'} | "
+        f"diff-barrier={'native' if HAS_DIFFERENTIABLE_BARRIER else 'custom_vjp'} | "
+        f"manual-axis detection={'native+shim' if HAS_NATIVE_AXIS_TYPE else 'shim'}"
+    )

@@ -25,7 +25,8 @@ from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
-from jax import shard_map
+
+from repro.compat import axis_size, shard_map
 
 
 # ---------------------------------------------------------------------------
@@ -84,7 +85,7 @@ class _Ctx:
 
 def _halo_from_next(x: jax.Array, w: int, axis: str) -> jax.Array:
     """Fetch the first w elements of the next shard (ring ppermute)."""
-    n = jax.lax.axis_size(axis)
+    n = axis_size(axis)
     edge = x[:w]
     perm = [(i, (i - 1) % n) for i in range(n)]     # shard i sends to i-1
     return jax.lax.ppermute(edge, axis, perm)

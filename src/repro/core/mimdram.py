@@ -28,6 +28,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
+from repro.compat import in_manual_context
 from repro.configs.base import ModelConfig, ShapeConfig
 
 # ---------------------------------------------------------------------------
@@ -179,10 +180,7 @@ def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
     # under a partial-manual shard_map (Proteus cross-pod step) XLA's SPMD
     # partitioner CHECK-fails on many constraint/reshard patterns
     # (spmd_partitioner_util.cc:504); let GSPMD propagate freely there.
-    from jax.sharding import AxisType  # noqa: PLC0415
-    ctx = jax.sharding.get_abstract_mesh()
-    if ctx is not None and not ctx.empty and any(
-            t == AxisType.Manual for t in getattr(ctx, "axis_types", ())):
+    if in_manual_context():
         return x
     return jax.lax.with_sharding_constraint(
         x, NamedSharding(plan.mesh, plan.spec(*logical, dims=tuple(x.shape)))

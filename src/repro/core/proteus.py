@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.compat import axis_size, tree_map
+
 
 # ---------------------------------------------------------------------------
 # Narrow-value detection (DBPE analogue)
@@ -157,7 +159,7 @@ def proteus_psum(x: jax.Array, axis_name: Any, *, bits: int = 8,
     # psum payloads under partial-manual meshes), accumulating locally in
     # int32. Wire bytes/device = (n-1) * n_elems * 1B — 4x narrower than
     # an fp32 ring all-reduce, 2x narrower than bf16.
-    n_dev = jax.lax.axis_size(axis_name)
+    n_dev = axis_size(axis_name)
     q8 = jnp.round(blocks / scale[:, None]).astype(jnp.int8)
     acc = q8.astype(jnp.int32)
     buf = q8
@@ -180,7 +182,7 @@ def cross_pod_psum(tree: Any, pod_axis: str = "pod", *, bits: int = 8,
             y = y / n_pods
         return y
 
-    return jax.tree_util.tree_map(red, tree)
+    return tree_map(red, tree)
 
 
 def bucketize(tree: Any, bucket_bytes: int = 4 << 20) -> List[List[Tuple]]:

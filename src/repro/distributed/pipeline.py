@@ -23,6 +23,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.compat import shard_map
+
 
 def _stage_slice(params_stacked: Any, stage: jax.Array, layers_per_stage: int):
     """Slice this stage's layer block out of (L, ...) stacked params."""
@@ -52,8 +54,11 @@ def pipelined_forward(
     lps = n_layers // n_stages
     M = x.shape[0]
 
-    def per_stage(params_all, xs):
-        stage = jax.lax.axis_index(pod_axis)
+    def per_stage(params_all, xs, stage_ids):
+        # stage id arrives as a pod-sharded input rather than
+        # lax.axis_index: under a partial-manual map, 0.4.x lowers
+        # axis_index to a bare PartitionId the SPMD partitioner rejects.
+        stage = stage_ids[0]
         my_params = _stage_slice(params_all, stage, lps)
         n_ticks = M + n_stages - 1
         perm = [(i, (i + 1) % n_stages) for i in range(n_stages)]
@@ -90,12 +95,13 @@ def pipelined_forward(
         # only the last stage holds results; psum replicates them pod-wide
         return jax.lax.psum(acc, pod_axis)
 
-    fn = jax.shard_map(
+    fn = shard_map(
         per_stage, mesh=mesh,
-        in_specs=(P(), P()),            # params + activations replicated on pod
+        in_specs=(P(), P(), P(pod_axis)),  # params + acts replicated on pod
         out_specs=P(),
         axis_names=frozenset({pod_axis}), check_vma=False)
-    return fn(params_stacked, x)
+    stage_ids = jnp.arange(mesh.shape[pod_axis], dtype=jnp.int32)
+    return fn(params_stacked, x, stage_ids)
 
 
 def bubble_fraction(n_stages: int, n_microbatches: int) -> float:

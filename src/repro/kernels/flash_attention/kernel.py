@@ -15,8 +15,10 @@ import math
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.compat import import_pallas, import_pallas_tpu
+
+pl = import_pallas()
+pltpu = import_pallas_tpu()  # None when this install lacks TPU pallas
 
 NEG_INF = -1e30
 

@@ -12,7 +12,9 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
+from repro.compat import import_pallas
+
+pl = import_pallas()
 
 
 def _bits_kernel(x_ref, o_ref):

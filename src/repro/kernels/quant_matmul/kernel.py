@@ -15,8 +15,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.compat import import_pallas, import_pallas_tpu
+
+pl = import_pallas()
+pltpu = import_pallas_tpu()  # None when this install lacks TPU pallas
 
 
 def _qmm_kernel(x_ref, wq_ref, scale_ref, o_ref, acc_ref, *, n_k_blocks: int):

@@ -12,8 +12,10 @@ import functools
 
 import jax
 import jax.numpy as jnp
-from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu
+from repro.compat import import_pallas, import_pallas_tpu
+
+pl = import_pallas()
+pltpu = import_pallas_tpu()  # None when this install lacks TPU pallas
 
 
 def _rglru_kernel(a_ref, b_ref, o_ref, h_ref, *, block_t: int):

@@ -11,18 +11,20 @@ from typing import Optional, Tuple
 import jax
 from jax.sharding import Mesh
 
+from repro.compat import make_mesh
+
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def make_local_mesh(axes: Tuple[str, ...] = ("data",)) -> Mesh:
     """Mesh over whatever devices exist (tests / CPU examples)."""
     n = len(jax.devices())
     shape = (n,) + (1,) * (len(axes) - 1)
-    return jax.make_mesh(shape, axes)
+    return make_mesh(shape, axes)
 
 
 def describe(mesh: Mesh) -> str:

@@ -14,8 +14,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import shard_map
 from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core import proteus
 from repro.core.mimdram import Plan, plan_sharding, use_plan

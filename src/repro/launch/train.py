@@ -19,6 +19,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import compat
 from repro.checkpoint import CheckpointManager
 from repro.configs import (ALL_IDS, RunConfig, SHAPES_BY_NAME, ShapeConfig,
                            get_config)
@@ -38,6 +39,7 @@ def train(arch: str, *, smoke: bool = True, steps: int = 100,
           checkpoint_dir: str = "", resume: bool = False,
           log_every: int = 10, use_mesh: bool = True,
           proteus: bool = False) -> Dict[str, Any]:
+    print(compat.describe_support())
     cfg = get_config(arch, smoke=smoke)
     run = run or RunConfig(total_steps=steps, microbatches=1)
     shape = ShapeConfig("custom", seq_len=seq, global_batch=batch, mode="train")

@@ -12,6 +12,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
@@ -74,7 +75,7 @@ class EncDecLM:
         positions = jnp.arange(S, dtype=jnp.int32)
 
         def body(carry, p):
-            h = jax.lax.optimization_barrier(carry)
+            h = optimization_barrier(carry)
             p = mod.constrain_tree(p, self._enc_layer())
             xn = rms_norm(h, p["ln1"], cfg.norm_eps)
             q, k, v = qkv(cfg, p["attn"], xn, positions)
@@ -116,7 +117,7 @@ class EncDecLM:
         positions = jnp.arange(tokens.shape[1], dtype=jnp.int32)
 
         def body(carry, p):
-            carry = jax.lax.optimization_barrier(carry)
+            carry = optimization_barrier(carry)
             p = mod.constrain_tree(p, self._dec_layer())
             return self._dec_block(p, carry, enc_out, positions), None
 

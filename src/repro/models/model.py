@@ -20,6 +20,7 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
@@ -114,7 +115,7 @@ class TransformerLM:
         cfg = self.cfg
         # barrier: stops XLA promoting the scan-saved bf16 residual stack to
         # f32 via convert motion (observed 2x activation memory otherwise)
-        x = jax.lax.optimization_barrier(x)
+        x = optimization_barrier(x)
         p = mod.constrain_tree(p, self.block_specs())
         xn = rms_norm(x, p["ln1"], cfg.norm_eps)
         q, k, v = qkv(cfg, p["attn"], xn, positions)

@@ -90,7 +90,8 @@ def constrain_tree(params: Any, specs: Any) -> Any:
     the per-layer slice to its sharded spec forces gather-after-slice.
     """
     from repro.core.mimdram import current_plan  # noqa: PLC0415
-    from jax.sharding import AxisType, NamedSharding  # noqa: PLC0415
+    from jax.sharding import NamedSharding  # noqa: PLC0415
+    from repro.compat import in_manual_context  # noqa: PLC0415
 
     plan = current_plan()
     if plan is None or plan.mesh is None:
@@ -99,9 +100,7 @@ def constrain_tree(params: Any, specs: Any) -> Any:
     # partitioner rejects sharding constraints on scan-sliced params
     # (spmd_partitioner_util CHECK); skip pinning there — params are
     # pod-replicated in that mode so the hoisting pathology is bounded.
-    ctx = jax.sharding.get_abstract_mesh()
-    if ctx is not None and not ctx.empty and any(
-            t == AxisType.Manual for t in getattr(ctx, "axis_types", ())):
+    if in_manual_context():
         return params
 
     def pin(x, s):

@@ -12,6 +12,7 @@ from typing import Any, Dict, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro import compat
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
@@ -48,10 +49,10 @@ def _dispatch_plan(T: int):
         return 1, (), None
     # when already inside a shard_map (e.g. the Proteus cross-pod step), the
     # nested shard_map must carry the context mesh's axis types
-    ctx = jax.sharding.get_abstract_mesh()
-    mesh = ctx if (ctx is not None and not ctx.empty
+    ctx = compat.context_mesh()
+    mesh = ctx if (ctx is not None
                    and set(plan.mesh.axis_names) <= set(ctx.axis_names)) \
-        else plan.mesh.abstract_mesh
+        else compat.abstract_mesh(plan.mesh)
     return g, tuple(axes), mesh
 
 
@@ -69,7 +70,7 @@ def _scatter_to_buffers(xt, idx, slot, keep, E: int, C: int, axes, mesh):
     if mesh is None:
         return local(xt, idx, slot, keep)
     from jax.sharding import PartitionSpec as P  # noqa: PLC0415
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         local, mesh=mesh,                 # abstract; composes in context
         in_specs=(P(axes), P(axes), P(axes), P(axes)),
         out_specs=P(None, axes),
@@ -86,7 +87,7 @@ def _gather_from_buffers(y_buf, idx, slot, axes, mesh):
     if mesh is None:
         return local(y_buf, idx, slot)
     from jax.sharding import PartitionSpec as P  # noqa: PLC0415
-    sm = jax.shard_map(
+    sm = compat.shard_map(
         local, mesh=mesh,                 # abstract; composes in context
         in_specs=(P(None, axes), P(axes), P(axes)),
         out_specs=P(axes),

@@ -10,6 +10,7 @@ from typing import Any, Dict, List, Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
@@ -122,7 +123,7 @@ class GriffinLM:
         x = constrain(x, "act_batch", "act_seq", "act_embed")
 
         def group_body(carry, gp):
-            h = jax.lax.optimization_barrier(carry)
+            h = optimization_barrier(carry)
             gp = mod.constrain_tree(gp, self._group_specs())
             h, _ = self._rec_layer(gp["rec1"], h, None)
             h, _ = self._rec_layer(gp["rec2"], h, None)

@@ -13,8 +13,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from jax.sharding import NamedSharding, PartitionSpec as P
-from jax import shard_map
 
+from repro.compat import make_mesh, shard_map
 from repro.configs import RunConfig, ShapeConfig, get_config
 from repro.core import dappa, proteus
 from repro.core.mimdram import plan_sharding, use_plan
@@ -42,7 +42,7 @@ if MODE == "sharding_invariance":
     batch = {k: jnp.asarray(v) for k, v in make_batch_fn(cfg, shape)(0).items()}
     loss_1 = jax.jit(model.loss)(params, batch)
 
-    mesh = jax.make_mesh((4, 2), ("data", "model"))
+    mesh = make_mesh((4, 2), ("data", "model"))
     plan = plan_sharding(cfg, shape, mesh)
 
     def loss_fn(p, b):
@@ -62,7 +62,7 @@ if MODE == "sharding_invariance":
     print("PASS sharding_invariance")
 
 elif MODE == "dappa_distributed":
-    mesh = jax.make_mesh((8,), ("data",))
+    mesh = make_mesh((8,), ("data",))
     x = dappa.input_stream("x")
     y = dappa.input_stream("y")
     dot = x.zip(y).map(lambda t: t[..., 0] * t[..., 1]).reduce("sum")
@@ -78,7 +78,7 @@ elif MODE == "dappa_distributed":
     print("PASS dappa_distributed")
 
 elif MODE == "proteus_psum":
-    mesh = jax.make_mesh((8,), ("pod",))
+    mesh = make_mesh((8,), ("pod",))
 
     def worker(g):
         exact = jax.lax.psum(g, "pod")
@@ -103,7 +103,7 @@ elif MODE == "proteus_train_step":
     # 2-pod mesh: quantized cross-pod grad reduction trains and tracks baseline
     cfg = get_config("pimref-100m", smoke=True)
     model = build_model(cfg)
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     shape = ShapeConfig("t", seq_len=32, global_batch=8, mode="train")
     plan = plan_sharding(cfg, shape, mesh)
     run = RunConfig(total_steps=10, microbatches=1, proteus_enabled=True,
@@ -130,7 +130,7 @@ elif MODE == "mini_dryrun":
     from repro.core import damov
     for arch in ("internlm2-1.8b", "mixtral-8x7b", "recurrentgemma-2b"):
         cfg = get_config(arch, smoke=True)
-        mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+        mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
         for mode, seq, gb in (("train", 64, 8), ("decode", 64, 8)):
             shape = ShapeConfig("t", seq_len=seq, global_batch=gb, mode=mode)
             plan = plan_sharding(cfg, shape, mesh)
@@ -146,7 +146,7 @@ elif MODE == "mini_dryrun":
 elif MODE == "pipeline":
     # GPipe over a 2-stage pod axis == sequential stack, bit-for-bit
     from repro.distributed.pipeline import bubble_fraction, pipelined_forward
-    mesh = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+    mesh = make_mesh((2, 2, 2), ("pod", "data", "model"))
     L, D, M, mb = 4, 16, 4, 8
     key = jax.random.PRNGKey(0)
     w = jax.random.normal(key, (L, D, D)) * 0.3

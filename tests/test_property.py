@@ -1,8 +1,15 @@
-"""Hypothesis property tests on system invariants."""
+"""Hypothesis property tests on system invariants.
+
+Skipped cleanly when hypothesis is not installed (it is a dev extra, see
+requirements-dev.txt) so the tier-1 suite stays green on minimal images.
+"""
 import jax
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+import pytest
+
+pytest.importorskip("hypothesis", reason="dev extra; pip install -r requirements-dev.txt")
+from hypothesis import given, settings, strategies as st  # noqa: E402
 
 from repro.configs.base import ModelConfig, ShapeConfig
 from repro.core import proteus

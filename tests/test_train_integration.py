@@ -63,10 +63,11 @@ def test_resume_continues_exactly(tmp_path):
 def test_elastic_restore_new_sharding(tmp_path):
     """Checkpoints are layout-agnostic: restore with explicit shardings."""
     from jax.sharding import NamedSharding, PartitionSpec as P
+    from repro.compat import make_mesh
     ck = CheckpointManager(str(tmp_path), async_save=False)
     tree = {"w": jnp.arange(16.0).reshape(4, 4)}
     ck.save(1, tree)
-    mesh = jax.make_mesh((1,), ("data",))
+    mesh = make_mesh((1,), ("data",))
     sh = {"w": NamedSharding(mesh, P("data", None))}
     step, restored = ck.restore(tree, shardings=sh)
     assert restored["w"].sharding == sh["w"]

@@ -1,0 +1,79 @@
+#!/usr/bin/env python3
+"""Lint: version-fragile JAX spellings may appear only inside repro.compat.
+
+Single source of truth for the rule — tests/test_compat.py imports this
+module and the CI compat-lint job runs it as a script (stdlib only, no jax
+needed). Import the shimmed symbols from ``repro.compat`` instead; see
+README.md for the support matrix.
+"""
+from __future__ import annotations
+
+import os
+import re
+import sys
+from typing import Iterator, List
+
+FORBIDDEN = [
+    re.compile(r"from\s+jax\s+import\s+[^#\n]*\bshard_map\b"),
+    re.compile(r"\bjax\.shard_map\b"),
+    re.compile(r"from\s+jax\.experimental(\.shard_map)?\s+import\s+[^#\n]*\bshard_map\b"),
+    re.compile(r"\bjax\.experimental\.shard_map\b"),
+    re.compile(r"\bjax\.sharding\.AxisType\b"),
+    re.compile(r"from\s+jax\.sharding\s+import\s+[^#\n]*\bAxisType\b"),
+    re.compile(r"\bjax\.make_mesh\b"),
+    re.compile(r"\bjax\.sharding\.get_abstract_mesh\b"),
+    re.compile(r"\bjax\.lax\.axis_size\b"),
+    re.compile(r"\bjax\.lax\.optimization_barrier\b"),
+    re.compile(r"from\s+jax\.experimental(\.pallas)?\s+import\s+[^#\n]*\bpallas\b"),
+    re.compile(r"from\s+jax\.experimental\.pallas\s+import\s"),
+    re.compile(r"\bjax\.experimental\.pallas\b"),
+]
+SCAN_DIRS = ("src", "tests", "benchmarks", "examples")
+EXEMPT = (
+    os.path.join("src", "repro", "compat"),
+    os.path.join("tests", "test_compat.py"),
+    os.path.join("tools", "check_jax_compat.py"),
+)
+
+
+def _py_files(repo: str) -> Iterator[str]:
+    for d in SCAN_DIRS:
+        root = os.path.join(repo, d)
+        if not os.path.isdir(root):
+            continue
+        for dirpath, _, files in os.walk(root):
+            for f in files:
+                if f.endswith(".py"):
+                    yield os.path.join(dirpath, f)
+
+
+def find_offenders(repo: str) -> List[str]:
+    offenders = []
+    for path in _py_files(repo):
+        rel = os.path.relpath(path, repo)
+        if any(rel.startswith(e) for e in EXEMPT):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                for pat in FORBIDDEN:
+                    if pat.search(line):
+                        offenders.append(f"{rel}:{lineno}: {line.strip()}")
+                        break
+    return offenders
+
+
+def main() -> int:
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    offenders = find_offenders(repo)
+    if offenders:
+        print("version-fragile JAX spellings outside repro.compat "
+              "(import them from repro.compat instead):", file=sys.stderr)
+        for line in offenders:
+            print(f"  {line}", file=sys.stderr)
+        return 1
+    print(f"compat lint clean ({len(FORBIDDEN)} patterns)")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
