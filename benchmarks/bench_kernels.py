@@ -20,7 +20,8 @@ VMEM_BYTES = 128 * 1024 * 1024  # ~128MB v5e VMEM (usable ~half)
 
 def _flash_tile_analysis(bq, bk, d, dtype_bytes=2):
     flops = 2 * bq * bk * d * 2              # qk^T + pv
-    hbm = (bq * d + 2 * bk * d) * dtype_bytes + bq * d * dtype_bytes / 1e9
+    # q read + k/v reads + output write, all in HBM bytes
+    hbm = (bq * d + 2 * bk * d) * dtype_bytes + bq * d * dtype_bytes
     ai = flops / hbm
     ridge = PEAK_FLOPS_BF16 / HBM_BW
     frac = min(1.0, ai / ridge)

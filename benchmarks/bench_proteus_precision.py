@@ -62,6 +62,15 @@ def run(emit) -> None:
         emit(f"proteus/selected/n{n:.0e}", 0, f"{pick.name} "
              f"({pick.bits}b, uProgram-select cost model)")
 
+    # (ii-b) data-aware selection: same size/budget, different block stats
+    uniform = jnp.ones((1 << 20,), jnp.float32) * 3.0
+    spiky = jax.random.normal(jax.random.PRNGKey(7), (1 << 20,)) ** 5
+    for name, t in (("uniform_blocks", uniform), ("spiky_blocks", spiky)):
+        pick = cm.select_for_tensor(t, err_budget=5e-3)
+        emit(f"proteus/selected_data_aware/{name}", 0,
+             f"{pick.name} (crest={float(proteus.block_crest(t)):.1f}, "
+             f"required_bits={int(proteus.required_bits_float(t))})")
+
     # (iii) measured quantized-reduction roundtrip (CPU walltime + error)
     g = jax.random.normal(jax.random.PRNGKey(0), (1 << 20,), jnp.float32)
     for bits in (8, 4):

@@ -1,0 +1,75 @@
+"""Serving benchmark: per-token dispatch loop vs fused on-device decode.
+
+The UPMEM benchmarking line (arXiv:2105.03814) shows PIM end-to-end
+throughput is dominated by host<->device dispatch + transfer, not kernel
+time; the serving analogue is the per-token decode loop (1 jit dispatch + 1
+host sync per token). This bench measures, per model family on the CPU smoke
+configs:
+
+  * dispatches/token        (loop: 1.0; fused: 1/chunk)
+  * tokens/s                (and the fused:loop speedup)
+  * p50/p95 per-token latency
+  * greedy byte-identity between the two engines (correctness gate)
+
+plus the continuous-batching engine draining a mixed-length queue.
+Emits into the standard ``benchmarks/run.py`` CSV; ``benchmarks/report.py
+--serve-csv`` turns those rows into BENCH_serve.json for cross-PR tracking.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+from repro.launch.serve import serve, serve_queue
+
+# decoder LM, recurrent (RG-LRU hybrid), MoE — the three serving families
+CONFIGS = (
+    ("pimref-100m", "decoder"),
+    ("recurrentgemma-2b", "recurrent"),
+    ("mixtral-8x7b", "moe"),
+)
+BATCH, PROMPT, GEN, CHUNK = 2, 16, 32, 8
+
+
+def run(emit) -> None:
+    for arch, label in CONFIGS:
+        kw = dict(smoke=True, batch=BATCH, prompt_len=PROMPT, gen=GEN,
+                  chunk=CHUNK)
+        loop = serve(arch, engine="loop", **kw)
+        fused = serve(arch, engine="fused", **kw)
+        match = bool(np.array_equal(loop["tokens"], fused["tokens"]))
+        speedup = fused["throughput_tok_s"] / loop["throughput_tok_s"]
+        emit(f"serve/{label}/per_token_loop",
+             loop["per_token_p50_s"] * 1e6,
+             f"tok_s={loop['throughput_tok_s']:.1f};"
+             f"disp_per_tok={loop['dispatches_per_token']:.3f};"
+             f"p95_us={loop['per_token_p95_s'] * 1e6:.0f}")
+        emit(f"serve/{label}/fused_chunk{CHUNK}",
+             fused["per_token_p50_s"] * 1e6,
+             f"tok_s={fused['throughput_tok_s']:.1f};"
+             f"disp_per_tok={fused['dispatches_per_token']:.3f};"
+             f"p95_us={fused['per_token_p95_s'] * 1e6:.0f};"
+             f"speedup={speedup:.2f};greedy_match={match}")
+        assert match, f"{arch}: fused tokens diverge from per-token loop"
+        assert fused["dispatches"] == -(-GEN // CHUNK), \
+            f"{arch}: expected 1 dispatch per decode chunk"
+        if label == "decoder":
+            # dispatch overhead dominates the tiny decoder: fused must win big
+            assert speedup >= 3.0, f"{arch}: fused speedup only {speedup:.2f}x"
+
+    eng = serve_queue("pimref-100m", smoke=True, slots=4, requests=8,
+                      prompt_len=PROMPT, gen=16, chunk=4)
+    s = eng.stats
+    recompiles = eng.compile_cache_size()
+    per_tok_us = 1e6 / max(s["tokens_per_second"], 1e-9)
+    emit("serve/engine/mixed_queue", per_tok_us,
+         f"tok_s={s['tokens_per_second']:.1f};"
+         f"disp_per_tok={s['dispatches_per_token']:.3f};"
+         f"requests={len(eng.completions)};prefills={s['prefills']};"
+         f"generate_programs={recompiles}")
+    assert len(eng.completions) == 8, "queue not fully drained"
+    assert recompiles in (None, 1), \
+        f"fused generate recompiled: {recompiles} programs"
+
+
+if __name__ == "__main__":
+    run(lambda n, t, d: print(f"{n},{t:.2f},{d}"))

@@ -1,6 +1,9 @@
-"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results JSONs.
+"""Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results JSONs,
+and BENCH_serve.json (serving perf trajectory) from the bench CSV.
 
     PYTHONPATH=src python -m benchmarks.report [--results DIR] [--tag TAG]
+    PYTHONPATH=src python -m benchmarks.report --serve-csv bench.csv \
+        [--bench-json BENCH_serve.json]
 """
 from __future__ import annotations
 
@@ -105,12 +108,65 @@ def summary(rows: List[Dict]) -> str:
     return f"{ok} OK / {sk} SKIP / {fa} FAIL of {len(rows)} cells"
 
 
+def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
+    """Parse ``serve/...`` rows of the run.py CSV into one dict per metric.
+
+    Rows look like ``serve/decoder/fused_chunk8,12.34,tok_s=123.4;...`` —
+    the derived column is ``key=value`` pairs separated by ``;``.
+    """
+    out: Dict[str, Dict[str, float]] = {
+        "tokens_s": {}, "dispatches_per_token": {}, "p95_us": {},
+        "speedup": {}, "per_token_p50_us": {},
+    }
+    with open(csv_path) as f:
+        for line in f:
+            if not line.startswith("serve/"):
+                continue
+            name, us, derived = line.strip().split(",", 2)
+            key = name[len("serve/"):]
+            if key.startswith("_"):       # harness bookkeeping (_wall_s, ...)
+                continue
+            try:
+                out["per_token_p50_us"][key] = float(us)
+            except ValueError:
+                continue
+            for kv in derived.split(";"):
+                if "=" not in kv:
+                    continue
+                k, v = kv.split("=", 1)
+                field = {"tok_s": "tokens_s",
+                         "disp_per_tok": "dispatches_per_token",
+                         "p95_us": "p95_us", "speedup": "speedup"}.get(k)
+                if field is None:
+                    continue
+                try:
+                    out[field][key] = float(v)
+                except ValueError:
+                    pass
+    return out
+
+
+def write_bench_serve(csv_path: str, json_path: str) -> None:
+    data = parse_serve_csv(csv_path)
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {json_path}: "
+          f"{len(data['tokens_s'])} serve rows")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--results", default=os.path.join(
         os.path.dirname(__file__), "results"))
     ap.add_argument("--tag", default="")
+    ap.add_argument("--serve-csv", default=None,
+                    help="run.py CSV to distill into BENCH_serve.json")
+    ap.add_argument("--bench-json", default="BENCH_serve.json")
     args = ap.parse_args()
+    if args.serve_csv:
+        write_bench_serve(args.serve_csv, args.bench_json)
+        return
     rows = load(args.results, args.tag)
     single = [r for r in rows if not r.get("multi_pod")]
     multi = [r for r in rows if r.get("multi_pod")]

@@ -1,7 +1,7 @@
 """Benchmark harness: one module per thesis table/figure (see DESIGN.md §7).
 
 Prints ``name,us_per_call,derived`` CSV. Run:
-    PYTHONPATH=src python -m benchmarks.run [--only <bench>]
+    PYTHONPATH=src python -m benchmarks.run [--only <bench> [--only <bench>]]
 """
 from __future__ import annotations
 
@@ -12,7 +12,7 @@ import traceback
 
 from benchmarks import (bench_damov_classify, bench_dappa_productivity,
                         bench_kernels, bench_mimdram_utilization,
-                        bench_proteus_precision)
+                        bench_proteus_precision, bench_serve)
 
 BENCHES = {
     "damov_classify": bench_damov_classify,
@@ -20,6 +20,7 @@ BENCHES = {
     "proteus_precision": bench_proteus_precision,
     "dappa_productivity": bench_dappa_productivity,
     "kernels": bench_kernels,
+    "serve": bench_serve,
 }
 
 
@@ -29,12 +30,14 @@ def emit(name: str, us_per_call: float, derived: str = "") -> None:
 
 def main() -> None:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None, choices=list(BENCHES))
+    ap.add_argument("--only", action="append", default=None,
+                    choices=list(BENCHES),
+                    help="run only these benches (repeatable)")
     args = ap.parse_args()
     print("name,us_per_call,derived")
     failed = []
     for name, mod in BENCHES.items():
-        if args.only and name != args.only:
+        if args.only and name not in args.only:
             continue
         t0 = time.time()
         try:

@@ -1,84 +1,74 @@
-"""Batched serving with a rolling request queue (continuous batching lite).
+"""Continuous batching with the slot-based serving engine.
 
-Requests arrive with different prompt lengths; the server pads them into the
-batch, prefills once, then decodes all slots in lock-step, retiring slots as
-they hit their token budget and refilling from the queue.
+Requests with different prompt lengths and token budgets stream through a
+fixed set of cache slots: finished sequences are swapped out and queued
+prompts prefilled into the freed slots between fused decode chunks (one jit
+dispatch per ``--chunk`` tokens). The caller never touches slots, padding,
+or caches — submit Requests, receive Completions.
 
     PYTHONPATH=src python examples/serve_batched.py --arch pimref-100m
 """
 import argparse
-import time
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.configs import ALL_IDS, ShapeConfig, get_config
 from repro.core.mimdram import plan_sharding, use_plan
 from repro.launch import mesh as mesh_lib
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.engine import Request, ServeEngine
 from repro.models import build_model, init_params
 
 
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", default="pimref-100m", choices=list(ALL_IDS))
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--slots", type=int, default=4)
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--max-prompt", type=int, default=32)
     ap.add_argument("--gen", type=int, default=12)
+    ap.add_argument("--chunk", type=int, default=4)
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
-    max_len = args.max_prompt + args.gen
     mesh = mesh_lib.make_local_mesh(("data",))
     plan = plan_sharding(
-        cfg, ShapeConfig("serve", max_len, args.batch, "decode"), mesh)
+        cfg, ShapeConfig("serve", args.max_prompt + args.gen, args.slots,
+                         "decode"), mesh)
     model = build_model(cfg)
     with use_plan(plan):
         params = init_params(model.param_specs(), jax.random.PRNGKey(0))
-    prefill = jax.jit(make_prefill_step(model, plan))
-    decode = jax.jit(make_decode_step(model, plan), donate_argnums=(1,))
 
+    engine = ServeEngine(model, params, plan, slots=args.slots,
+                         prompt_len=args.max_prompt, max_new=args.gen,
+                         chunk=args.chunk)
     rng = np.random.default_rng(0)
-    queue = [rng.integers(1, cfg.vocab_size,
-                          rng.integers(8, args.max_prompt)).astype(np.int32)
-             for _ in range(args.requests)]
-    done, t0 = 0, time.time()
-    total_tokens = 0
-    while queue:
-        wave = [queue.pop(0) for _ in range(min(args.batch, len(queue)))]
-        # left-pad to a common prompt length (padding attends causally only)
-        plen = max(len(r) for r in wave)
-        toks = np.zeros((len(wave), plen), np.int32)
-        for i, r in enumerate(wave):
-            toks[i, plen - len(r):] = r
-        batch = {"tokens": jnp.asarray(toks)}
+
+    def extras():
+        # modality inputs for non-text families, shaped for the engine's
+        # batch=1 prompt bucket
         if cfg.family == "audio":
-            batch["src_embeds"] = jnp.asarray(
-                rng.standard_normal((len(wave), plen, cfg.d_model)), jnp.float32)
+            src = int(args.max_prompt * cfg.src_len_ratio)
+            return {"src_embeds": rng.standard_normal(
+                (1, src, cfg.d_model)).astype(np.float32)}
         if cfg.family == "vlm":
-            P = min(cfg.num_patches, plen // 2)
-            batch["tokens"] = batch["tokens"][:, : plen - P]
-            batch["patch_embeds"] = jnp.asarray(
-                rng.standard_normal((len(wave), P, cfg.d_model)), jnp.float32)
-        logits, cache = prefill(params, batch)
-        from repro.launch.serve import _grow_cache
-        cache = _grow_cache(model, cache, len(wave), plen + args.gen)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        outs = []
-        for _ in range(args.gen):
-            outs.append(np.asarray(tok[:, 0]))
-            logits, cache = decode(params, cache, tok)
-            tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-        done += len(wave)
-        total_tokens += len(wave) * args.gen
-        print(f"wave of {len(wave)} requests done "
-              f"({done}/{args.requests}); sample: "
-              f"{np.stack(outs, 1)[0][:8]}")
-    dt = time.time() - t0
-    print(f"\n{done} requests, {total_tokens} tokens in {dt:.1f}s "
-          f"({total_tokens / dt:.1f} tok/s aggregate)")
+            P = min(cfg.num_patches, args.max_prompt // 2)
+            return {"patch_embeds": rng.standard_normal(
+                (1, P, cfg.d_model)).astype(np.float32)}
+        return None
+
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(8, args.max_prompt)),
+                    max_new_tokens=args.gen, extras=extras())
+            for i in range(args.requests)]
+    for c in engine.run(reqs):
+        print(f"request {c.uid}: {len(c.tokens)} tokens "
+              f"({c.finish_reason}); sample: {c.tokens[:8]}")
+    s = engine.stats
+    print(f"\n{len(engine.completions)} requests, {s['tokens_out']} tokens "
+          f"in {s['wall_seconds']:.1f}s ({s['tokens_per_second']:.1f} tok/s, "
+          f"{s['dispatches_per_token']:.3f} dispatches/token)")
 
 
 if __name__ == "__main__":

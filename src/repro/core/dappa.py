@@ -131,7 +131,11 @@ def _eval(s: Stream, ctx: _Ctx) -> Tuple[jax.Array, Optional[jax.Array]]:
             ext = jnp.concatenate([v, pad], axis=0)
             gpos = jnp.arange(n_local)
             n_total = n_local
-        wins = jnp.stack([ext[i: i + n_local] for i in range(w)], axis=-1)
+        # one gather with a precomputed (n_local, w) index matrix instead of
+        # w materialized shifted copies (w slice+stack HLO ops)
+        idx = (jnp.arange(n_local)[:, None]
+               + jnp.arange(w)[None, :])                  # (n_local, w)
+        wins = jnp.moveaxis(ext[idx], 1, -1)
         valid = gpos <= (n_total - w)
         mask = valid if m is None else (m & valid)
         out = (s.fn(wins), mask)

@@ -1,0 +1,229 @@
+"""Continuous-batching serving engine: slot-based queue over fused decode.
+
+The DaPPA-style contract applied to serving: callers submit :class:`Request`s
+and get :class:`Completion`s back — they never manage hardware slots, caches,
+padding, or dispatch. Internally the engine keeps a fixed number of *slots*
+(rows of one batched, pre-sized KV cache). Between fused decode chunks
+(``make_generate_step``: one jit dispatch per ``chunk`` tokens) finished
+sequences are swapped out and queued prompts are prefilled into the freed
+slots. Every per-slot state (``pos``, ``pos_ids``, KV rows) is independent,
+so sequences at different depths coexist in one cache.
+
+All device programs have static shapes (slots x prompt_len x max_len x
+chunk), so after the first chunk per shape everything is a compile-cache hit.
+
+    PYTHONPATH=src python -m repro.launch.serve --mode queue --arch pimref-100m
+"""
+from __future__ import annotations
+
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Deque, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ShapeConfig
+from repro.core.mimdram import Plan
+from repro.launch import specs as specs_lib
+from repro.launch.steps import make_serving_jits
+
+
+@dataclass
+class Request:
+    """One generation request. ``tokens``: 1-D int32 prompt (longer prompts
+    are truncated to the engine's prompt_len bucket, shorter are left-padded).
+    ``extras``: additional prefill inputs (e.g. ``patch_embeds``) shaped for
+    batch=1 at the engine's prompt length."""
+
+    uid: int
+    tokens: np.ndarray
+    max_new_tokens: int
+    extras: Optional[Dict[str, Any]] = None
+
+
+@dataclass
+class Completion:
+    uid: int
+    tokens: np.ndarray            # generated token ids (1-D)
+    finish_reason: str            # "length" | "eos"
+
+
+@dataclass
+class _Slot:
+    request: Request
+    produced: List[int] = field(default_factory=list)
+
+
+class ServeEngine:
+    """Slot-based continuous batching over one fused-decode compiled program.
+
+    Args:
+      slots: number of concurrently decoded sequences (cache batch dim).
+      prompt_len: prompt bucket; prompts are left-padded/truncated to this.
+      max_new: per-request generation cap (and cache sizing: max_len defaults
+        to prompt_len + max_new).
+      chunk: decode tokens per dispatch (the fused scan length).
+      eos_id: stop token (None = length-only stopping).
+      temperature/top_k: sampling knobs (0 temperature = greedy).
+    """
+
+    def __init__(self, model, params, plan: Plan, *, slots: int = 4,
+                 prompt_len: int = 32, max_new: int = 32, chunk: int = 8,
+                 max_len: Optional[int] = None, eos_id: Optional[int] = None,
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+        self.model, self.params, self.plan = model, params, plan
+        self.slots, self.prompt_len, self.chunk = slots, prompt_len, chunk
+        self.max_new, self.eos_id = max_new, eos_id
+        self.max_len = max_len or (prompt_len + max_new)
+        assert self.max_len >= prompt_len + 1
+
+        self._prefill, self._generate, rep, cache_sh = make_serving_jits(
+            model, plan, max_len=self.max_len, chunk=chunk,
+            temperature=temperature, top_k=top_k)
+
+        # big cache = batch-1 prefill cache zeros, tiled to `slots` rows
+        shape1 = ShapeConfig("engine_prefill", seq_len=prompt_len,
+                             global_batch=1, mode="prefill")
+        small = specs_lib.prefill_cache_specs(model, model.cfg, shape1,
+                                              self.max_len)
+        # family-aware prefill inputs: vlm reserves a patch prefix inside the
+        # prompt bucket (shorter token field), audio needs src_embeds, etc.
+        self._batch_template = specs_lib.input_specs(model.cfg, shape1)
+        self._tok_len = self._batch_template["tokens"].shape[1]
+        axes = model.cache_logical_axes()
+        # -1 = no batch axis (leaf shared across slots; None breaks tree_map)
+        self._batch_axis = jax.tree_util.tree_map(
+            lambda ax: ax.index("act_batch") if "act_batch" in ax else -1,
+            axes, is_leaf=lambda x: isinstance(x, tuple))
+
+        def tile(ax, sd):
+            shp = list(sd.shape)
+            if ax >= 0:
+                shp[ax] = slots
+            return jnp.zeros(tuple(shp), sd.dtype)
+
+        self.cache = jax.tree_util.tree_map(tile, self._batch_axis, small)
+        self._tok = jnp.zeros((slots, 1), jnp.int32)
+        self._key = jax.random.PRNGKey(seed)
+        if rep is not None:
+            self.cache = jax.device_put(self.cache, cache_sh)
+            self._tok = jax.device_put(self._tok, rep)
+            self._key = jax.device_put(self._key, rep)
+
+        def insert(big, tok, small_cache, first_tok, slot):
+            def put(ax, b, s):
+                if ax < 0:
+                    return b
+                start = tuple(slot if j == ax else 0 for j in range(b.ndim))
+                return jax.lax.dynamic_update_slice(
+                    b, s.astype(b.dtype), start)
+
+            big = jax.tree_util.tree_map(put, self._batch_axis, big,
+                                         small_cache)
+            tok = jax.lax.dynamic_update_slice(tok, first_tok, (slot, 0))
+            return big, tok
+
+        self._insert = jax.jit(insert, donate_argnums=(0, 1),
+                               out_shardings=(cache_sh, rep))
+
+        self._queue: Deque[Request] = deque()
+        self._active: Dict[int, _Slot] = {}
+        self._free: List[int] = list(range(slots))[::-1]
+        self.completions: List[Completion] = []
+        # instrumentation for benchmarks / regression tracking
+        self.stats: Dict[str, Any] = {
+            "decode_dispatches": 0, "prefills": 0, "tokens_out": 0,
+            "wall_seconds": 0.0, "chunk_seconds": [],
+        }
+
+    # -- queue interface -----------------------------------------------------
+    def submit(self, request: Request) -> None:
+        self._queue.append(request)
+
+    def _prefill_batch(self, req: Request) -> Dict[str, Any]:
+        toks = np.zeros((1, self._tok_len), np.int32)
+        t = np.asarray(req.tokens, np.int32)[-self._tok_len:]
+        toks[0, self._tok_len - len(t):] = t
+        batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
+        if req.extras:
+            batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
+        for k, sd in self._batch_template.items():
+            if k not in batch:
+                raise ValueError(
+                    f"request {req.uid}: family {self.model.cfg.family!r} "
+                    f"needs extras[{k!r}] shaped {sd.shape}")
+            if tuple(batch[k].shape) != sd.shape:
+                raise ValueError(
+                    f"request {req.uid}: input {k!r} has shape "
+                    f"{tuple(batch[k].shape)}, engine bucket needs {sd.shape}")
+        return batch
+
+    def _admit(self) -> None:
+        while self._free and self._queue:
+            req = self._queue.popleft()
+            # build+validate the batch BEFORE claiming a slot: a malformed
+            # request raises to the caller without leaking concurrency
+            batch = self._prefill_batch(req)
+            slot = self._free.pop()
+            logits, small = self._prefill(self.params, batch)
+            first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+            self.cache, self._tok = self._insert(
+                self.cache, self._tok, small, first, jnp.int32(slot))
+            self._active[slot] = _Slot(request=req)
+            self.stats["prefills"] += 1
+
+    def step(self) -> bool:
+        """Admit waiting requests, run one fused decode chunk, retire finished
+        slots. Returns False when fully drained."""
+        self._admit()
+        if not self._active:
+            return False
+        t0 = time.perf_counter()
+        self.cache, self._tok, self._key, toks = self._generate(
+            self.params, self.cache, self._tok, self._key)
+        toks_np = np.asarray(toks)          # ONE host sync per chunk
+        self.stats["chunk_seconds"].append(time.perf_counter() - t0)
+        self.stats["decode_dispatches"] += 1
+        for slot in list(self._active):
+            st = self._active[slot]
+            cap = min(st.request.max_new_tokens,
+                      self.max_len - self.prompt_len)
+            for t in toks_np[slot]:
+                st.produced.append(int(t))
+                done_eos = self.eos_id is not None and int(t) == self.eos_id
+                if done_eos or len(st.produced) >= cap:
+                    self._retire(slot, "eos" if done_eos else "length")
+                    break
+        return bool(self._active or self._queue)
+
+    def _retire(self, slot: int, reason: str) -> None:
+        st = self._active.pop(slot)
+        self._free.append(slot)
+        self.stats["tokens_out"] += len(st.produced)
+        self.completions.append(Completion(
+            uid=st.request.uid, tokens=np.asarray(st.produced, np.int32),
+            finish_reason=reason))
+
+    def run(self, requests: Optional[List[Request]] = None) -> List[Completion]:
+        """Drain the queue (plus ``requests``); returns all completions."""
+        for r in requests or ():
+            self.submit(r)
+        t0 = time.perf_counter()
+        while self.step():
+            pass
+        # stats are cumulative across run() calls (the engine is reusable)
+        self.stats["wall_seconds"] += time.perf_counter() - t0
+        self.stats["tokens_per_second"] = self.stats["tokens_out"] / max(
+            self.stats["wall_seconds"], 1e-9)
+        self.stats["dispatches_per_token"] = (
+            self.stats["decode_dispatches"] / max(self.stats["tokens_out"], 1))
+        return self.completions
+
+    def compile_cache_size(self) -> Optional[int]:
+        """Compiled-program count of the fused generate step (1 after warmup
+        means no recompilation). None when the JAX version has no probe."""
+        probe = getattr(self._generate, "_cache_size", None)
+        return probe() if callable(probe) else None

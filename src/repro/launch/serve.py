@@ -1,7 +1,16 @@
-"""Serving driver: batched prefill + decode with a continuous request queue.
+"""Serving driver: pre-sized cache prefill + fused on-device decode.
+
+Two decode engines share one pre-sized cache layout (``model.init_cache``
+sized to prompt_len + gen at prefill; no repad between phases):
+
+  * ``loop``  — the per-token baseline: one jit dispatch + one host sync per
+    generated token (what dispatch-bound PIM serving looks like).
+  * ``fused`` — ``make_generate_step``: the whole decode loop runs inside one
+    jit via ``jax.lax.scan`` (on-device sampling, cache donated/updated in
+    place): 1 dispatch + 1 host sync per ``chunk`` tokens.
 
   PYTHONPATH=src python -m repro.launch.serve --arch pimref-100m \
-      --batch 4 --prompt-len 32 --gen 16
+      --batch 4 --prompt-len 32 --gen 16 [--engine fused|loop] [--mode queue]
 """
 from __future__ import annotations
 
@@ -13,18 +22,35 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.configs import ALL_IDS, RunConfig, ShapeConfig, get_config
+from repro.configs import ALL_IDS, ShapeConfig, get_config
 from repro.core.mimdram import plan_sharding, use_plan
 from repro.launch import mesh as mesh_lib
-from repro.launch.steps import make_decode_step, make_prefill_step
+from repro.launch.engine import Request, ServeEngine
+from repro.launch.steps import (make_decode_step, make_serving_jits,
+                                sample_tokens)
 from repro.models import build_model, init_params
+
+
+def _clone(tree):
+    """Deep-copy a pytree, preserving each leaf's sharding (so a warmup call
+    on the clone has the same jit signature as the real call)."""
+    return jax.tree_util.tree_map(
+        lambda x: jax.device_put(jnp.array(x), x.sharding), tree)
 
 
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, seed: int = 0,
-          greedy: bool = True) -> Dict[str, Any]:
+          engine: str = "fused", chunk: int = 8, temperature: float = 0.0,
+          top_k: int = 0, warmup: bool = True) -> Dict[str, Any]:
+    """Prefill a synthetic batch then decode ``gen`` tokens per sequence.
+
+    Returns tokens plus timing/dispatch metrics; with ``temperature == 0``
+    both engines produce byte-identical greedy tokens.
+    """
+    assert engine in ("fused", "loop"), engine
     cfg = get_config(arch, smoke=smoke)
-    shape = ShapeConfig("serve", seq_len=prompt_len + gen, global_batch=batch,
+    max_len = prompt_len + gen
+    shape = ShapeConfig("serve", seq_len=max_len, global_batch=batch,
                         mode="decode")
     mesh = mesh_lib.make_local_mesh(("data",))
     plan = plan_sharding(cfg, shape, mesh)
@@ -33,18 +59,22 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     with use_plan(plan):
         params = init_params(model.param_specs(), key)
 
-    prefill = jax.jit(make_prefill_step(model, plan))
-    decode = jax.jit(make_decode_step(model, plan), donate_argnums=(1,))
+    prefill, generate, rep, cache_sh = make_serving_jits(
+        model, plan, max_len=max_len, chunk=chunk, temperature=temperature,
+        top_k=top_k)
+    decode = jax.jit(make_decode_step(model, plan), donate_argnums=(1,),
+                     out_shardings=(None, cache_sh))
+    n_chunks = -(-gen // chunk)
 
     rng = np.random.default_rng(seed)
     pre_batch: Dict[str, Any] = {
         "tokens": jnp.asarray(
             rng.integers(0, cfg.vocab_size, (batch, prompt_len)), jnp.int32)}
     if cfg.family == "vlm":
-        P = min(cfg.num_patches, prompt_len // 2)
-        pre_batch["tokens"] = pre_batch["tokens"][:, : prompt_len - P]
+        npatch = min(cfg.num_patches, prompt_len // 2)
+        pre_batch["tokens"] = pre_batch["tokens"][:, : prompt_len - npatch]
         pre_batch["patch_embeds"] = jnp.asarray(
-            rng.standard_normal((batch, P, cfg.d_model)), jnp.float32)
+            rng.standard_normal((batch, npatch, cfg.d_model)), jnp.float32)
     if cfg.family == "audio":
         pre_batch["src_embeds"] = jnp.asarray(
             rng.standard_normal((batch, prompt_len, cfg.d_model)), jnp.float32)
@@ -54,43 +84,86 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     logits.block_until_ready()
     t_prefill = time.time() - t0
 
-    # grow caches that were sized by prefill (full-attn caches sized to prompt)
-    cache = _grow_cache(model, cache, batch, prompt_len + gen)
+    tok = jax.device_put(
+        jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), rep)
+    gkey = jax.device_put(jax.random.PRNGKey(seed + 1), rep)
 
+    if warmup:     # compile outside the timed region (clone: both jits donate)
+        if engine == "loop":
+            jax.block_until_ready(decode(params, _clone(cache), tok))
+        else:
+            jax.block_until_ready(
+                generate(params, _clone(cache), tok, gkey)[3])
+
+    step_times: List[float] = []
     out_tokens: List[np.ndarray] = []
-    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    dispatches = 0
     t0 = time.time()
-    for _ in range(gen):
-        out_tokens.append(np.asarray(tok[:, 0]))
-        logits, cache = decode(params, cache, tok)
-        tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-    jax.block_until_ready(tok)
+    if engine == "loop":
+        for _ in range(gen):
+            ts = time.perf_counter()
+            out_tokens.append(np.asarray(tok[:, 0]))    # host sync, every token
+            logits, cache = decode(params, cache, tok)
+            if temperature > 0:
+                gkey, sub = jax.random.split(gkey)
+                nxt = sample_tokens(logits[:, -1], sub, temperature, top_k)
+            else:
+                nxt = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+            tok = jax.device_put(nxt[:, None], rep)
+            dispatches += 1
+            step_times.append(time.perf_counter() - ts)
+        jax.block_until_ready(tok)
+        toks = np.stack(out_tokens, axis=1)
+        per_tok = np.asarray(step_times)
+    else:
+        chunks: List[np.ndarray] = []
+        for _ in range(n_chunks):
+            ts = time.perf_counter()
+            cache, tok, gkey, toks_d = generate(params, cache, tok, gkey)
+            chunks.append(np.asarray(toks_d))           # host sync, per chunk
+            dispatches += 1
+            step_times.append(time.perf_counter() - ts)
+        toks = np.concatenate(chunks, axis=1)[:, :gen]
+        per_tok = np.repeat(np.asarray(step_times) / chunk, chunk)[:gen]
     t_decode = time.time() - t0
-    toks = np.stack(out_tokens, axis=1)
+
     return {
         "tokens": toks,
         "prefill_s": t_prefill,
         "decode_s_per_tok": t_decode / max(gen, 1),
         "throughput_tok_s": batch * gen / max(t_decode, 1e-9),
+        "dispatches": dispatches,
+        "dispatches_per_token": dispatches / max(gen, 1),
+        "per_token_p50_s": float(np.percentile(per_tok, 50)),
+        "per_token_p95_s": float(np.percentile(per_tok, 95)),
     }
 
 
-def _grow_cache(model, cache, batch: int, max_len: int):
-    """Re-host prefill caches inside a max_len-sized decode cache."""
-    template = model.init_cache(batch, max_len)
-
-    def place(t, c):
-        if not hasattr(t, "shape") or t.shape == getattr(c, "shape", None):
-            return c
-        if t.ndim == c.ndim and t.shape != c.shape:
-            # pad sequence dims up to template size (-1 for position ids)
-            pads = [(0, ts - cs) for ts, cs in zip(t.shape, c.shape)]
-            if all(p[1] >= 0 for p in pads):
-                fill = -1 if (c.dtype == jnp.int32 and c.ndim == 1) else 0
-                return jnp.pad(c, pads, constant_values=fill)
-        return c
-
-    return jax.tree_util.tree_map(place, template, cache)
+def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
+                requests: int = 10, prompt_len: int = 32, gen: int = 16,
+                chunk: int = 8, seed: int = 0, temperature: float = 0.0,
+                top_k: int = 0) -> ServeEngine:
+    """Continuous batching: drain a queue of mixed-length synthetic requests
+    through a :class:`ServeEngine`; returns the drained engine (stats +
+    completions)."""
+    cfg = get_config(arch, smoke=smoke)
+    mesh = mesh_lib.make_local_mesh(("data",))
+    plan = plan_sharding(
+        cfg, ShapeConfig("serve", prompt_len + gen, slots, "decode"), mesh)
+    model = build_model(cfg)
+    with use_plan(plan):
+        params = init_params(model.param_specs(), jax.random.PRNGKey(seed))
+    eng = ServeEngine(model, params, plan, slots=slots, prompt_len=prompt_len,
+                      max_new=gen, chunk=chunk, temperature=temperature,
+                      top_k=top_k, seed=seed)
+    rng = np.random.default_rng(seed)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(4, prompt_len + 1)),
+                    max_new_tokens=int(rng.integers(max(gen // 2, 1), gen + 1)))
+            for i in range(requests)]
+    eng.run(reqs)
+    return eng
 
 
 def main() -> None:
@@ -99,13 +172,34 @@ def main() -> None:
     ap.add_argument("--batch", type=int, default=4)
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
+    ap.add_argument("--chunk", type=int, default=8)
+    ap.add_argument("--engine", default="fused", choices=["fused", "loop"])
+    ap.add_argument("--mode", default="batch", choices=["batch", "queue"])
+    ap.add_argument("--slots", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=10)
+    ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--top-k", type=int, default=0)
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
+    if args.mode == "queue":
+        eng = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
+                          requests=args.requests, prompt_len=args.prompt_len,
+                          gen=args.gen, chunk=args.chunk,
+                          temperature=args.temperature, top_k=args.top_k)
+        s = eng.stats
+        print(f"{len(eng.completions)} requests, {s['tokens_out']} tokens in "
+              f"{s['wall_seconds']:.2f}s ({s['tokens_per_second']:.1f} tok/s, "
+              f"{s['dispatches_per_token']:.3f} dispatches/token, "
+              f"{s['prefills']} prefills)")
+        return
     out = serve(args.arch, smoke=args.smoke, batch=args.batch,
-                prompt_len=args.prompt_len, gen=args.gen)
-    print(f"prefill: {out['prefill_s']:.3f}s  decode: "
+                prompt_len=args.prompt_len, gen=args.gen, chunk=args.chunk,
+                engine=args.engine, temperature=args.temperature,
+                top_k=args.top_k)
+    print(f"engine={args.engine}  prefill: {out['prefill_s']:.3f}s  decode: "
           f"{out['decode_s_per_tok'] * 1e3:.1f}ms/tok  "
-          f"throughput: {out['throughput_tok_s']:.1f} tok/s")
+          f"throughput: {out['throughput_tok_s']:.1f} tok/s  "
+          f"dispatches/token: {out['dispatches_per_token']:.3f}")
     print("sample tokens:", out["tokens"][0][:10])
 
 

@@ -52,10 +52,32 @@ def batch_pspecs(cfg: ModelConfig, shape: ShapeConfig, plan: Plan) -> Dict:
     return out
 
 
-def cache_specs(model, shape: ShapeConfig) -> Any:
-    """Abstract KV/state cache via eval_shape (no allocation)."""
+def cache_specs(model, shape: ShapeConfig, max_len: Optional[int] = None) -> Any:
+    """Abstract KV/state cache via eval_shape (no allocation).
+
+    ``max_len`` overrides the cache capacity (serving pre-sizes the cache to
+    prompt_len + gen so prefill -> decode needs no repad).
+    """
     return jax.eval_shape(
-        lambda: model.init_cache(shape.global_batch, shape.seq_len))
+        lambda: model.init_cache(shape.global_batch, max_len or shape.seq_len))
+
+
+def prefill_cache_specs(model, cfg: ModelConfig, shape: ShapeConfig,
+                        max_len: int) -> Any:
+    """Abstract pre-sized cache as actually produced by ``model.prefill``.
+
+    Unlike :func:`cache_specs` (the ``init_cache`` template), this traces the
+    prefill itself, so source-length-dependent leaves (enc-dec cross caches)
+    get their exact shapes. Used by the serving engine to build per-slot
+    insert targets.
+    """
+    from repro.models import module as mod  # noqa: PLC0415 (cycle-free import)
+
+    abstract_p = mod.abstract_params(model.param_specs())
+    batch = input_specs(cfg, shape)
+    _, cache = jax.eval_shape(
+        lambda p, b: model.prefill(p, b, max_len=max_len), abstract_p, batch)
+    return cache
 
 
 def cache_pspecs(model, plan: Plan, shape: Optional[ShapeConfig] = None) -> Any:

@@ -163,10 +163,14 @@ def make_train_step_proteus(model, optimizer: Optimizer, plan: Plan,
 # ---------------------------------------------------------------------------
 # Serve
 # ---------------------------------------------------------------------------
-def make_prefill_step(model, plan: Plan):
+def make_prefill_step(model, plan: Plan, max_len: Optional[int] = None):
+    """Prefill step; with ``max_len`` the returned cache is pre-sized for
+    ``max_len`` total positions (no repad before decode)."""
     def prefill_step(params, batch):
         with use_plan(plan):
-            return model.prefill(params, batch)
+            if max_len is None:
+                return model.prefill(params, batch)
+            return model.prefill(params, batch, max_len=max_len)
     return prefill_step
 
 
@@ -175,6 +179,76 @@ def make_decode_step(model, plan: Plan):
         with use_plan(plan):
             return model.decode_step(params, cache, tokens)
     return decode_step
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float = 0.0,
+                  top_k: int = 0) -> jax.Array:
+    """On-device next-token selection. logits: (B, V) -> (B,) int32.
+
+    temperature <= 0 means greedy argmax (key unused); top_k > 0 restricts
+    sampling to the k highest-probability tokens.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits.astype(jnp.float32) / temperature
+    if top_k > 0:
+        kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
+        lf = jnp.where(lf < kth, -1e30, lf)
+    return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
+                      temperature: float = 0.0, top_k: int = 0):
+    """Sharding-pinned (prefill, generate, rep, cache_sh) for one serving cell.
+
+    Cache (and fed-back token/key) shardings are pinned identically on both
+    jits so prefill's cache has exactly the signature generate emits — each
+    program compiles once; every chunk after the first is a compile-cache
+    hit. With a mesh-less plan the pins are skipped (rep/cache_sh = None).
+    """
+    if plan.mesh is not None:
+        rep = NamedSharding(plan.mesh, P())
+        cache_sh = named(plan, specs_lib.cache_pspecs(model, plan))
+    else:
+        rep = cache_sh = None
+    prefill = jax.jit(make_prefill_step(model, plan, max_len=max_len),
+                      out_shardings=(None, cache_sh))
+    generate = jax.jit(
+        make_generate_step(model, plan, chunk=chunk, temperature=temperature,
+                           top_k=top_k),
+        donate_argnums=(1,), out_shardings=(cache_sh, rep, rep, rep))
+    return prefill, generate, rep, cache_sh
+
+
+def make_generate_step(model, plan: Plan, *, chunk: int,
+                       temperature: float = 0.0, top_k: int = 0):
+    """Fused decode loop: ``chunk`` tokens per dispatch via ``jax.lax.scan``.
+
+    The per-token serving loop pays one jit dispatch + one host sync per
+    generated token; this rolls the whole decode loop (cache update, forward,
+    sampling) into ONE on-device program. Jit it with ``donate_argnums=(1,)``
+    so the cache is updated in place (no second live copy).
+
+        generate_step(params, cache, tok, key) -> (cache, tok, key, toks)
+
+    ``tok`` (B, 1) is the next token to feed (from prefill argmax or the
+    previous chunk); ``toks`` (B, chunk) are the emitted tokens, the first
+    being ``tok`` itself — byte-identical to the per-token loop's output.
+    """
+
+    def generate_step(params, cache, tok, key):
+        with use_plan(plan):
+            def body(carry, _):
+                cache, tok, key = carry
+                logits, cache = model.decode_step(params, cache, tok)
+                key, sub = jax.random.split(key)
+                nxt = sample_tokens(logits[:, -1], sub, temperature, top_k)
+                return (cache, nxt[:, None], key), tok[:, 0]
+
+            (cache, tok, key), toks = jax.lax.scan(
+                body, (cache, tok, key), None, length=chunk)
+        return cache, tok, key, toks.T      # toks: (B, chunk)
+    return generate_step
 
 
 # ---------------------------------------------------------------------------

@@ -16,8 +16,9 @@ from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
-from repro.models.layers import (chunked_attention, dense, gated_mlp, rms_norm,
-                                 rope, softmax_xent)
+from repro.models.layers import (chunked_attention, dense, gated_mlp,
+                                 ring_cache_update, rms_norm, rope,
+                                 softmax_xent)
 from repro.models.model import attn_param_specs, mlp_param_specs, qkv
 
 
@@ -146,21 +147,34 @@ class EncDecLM:
             "v": jnp.zeros((L,) + kv, self.cdtype),
             "xk": jnp.zeros((L,) + xkv, self.cdtype),
             "xv": jnp.zeros((L,) + xkv, self.cdtype),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     def cache_logical_axes(self):
         kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
-        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ()}
+        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ("act_batch",)}
 
-    def prefill(self, params, batch):
-        """Encode source + run decoder over the token prefix, build caches."""
+    def prefill(self, params, batch, max_len=None):
+        """Encode source + run decoder over the token prefix, build caches.
+
+        With ``max_len`` the self-attention cache is pre-sized to ``max_len``
+        positions (decode writes at ``pos`` directly; positions >= ``pos`` are
+        masked via ``kv_valid_len``) — no repad between prefill and decode.
+        The cross-attention cache keeps the exact source length.
+        """
         cfg = self.cfg
         enc_out = self.encode(params, batch["src_embeds"])
         tokens = batch["tokens"]
         B, S = tokens.shape
+        T = max(max_len or S, S)
         x = params["embed"].astype(self.cdtype)[tokens]
         positions = jnp.arange(S, dtype=jnp.int32)
+
+        def store(k):
+            kk = k.astype(self.cdtype)
+            if T > S:
+                kk = jnp.pad(kk, ((0, 0), (0, T - S), (0, 0), (0, 0)))
+            return kk
 
         def body(carry, p):
             h = carry
@@ -178,21 +192,21 @@ class EncDecLM:
             h = h + gated_mlp(rms_norm(h, p["ln2"], cfg.norm_eps),
                               p["mlp"]["wi_gate"], p["mlp"]["wi_up"],
                               p["mlp"]["wo"])
-            return h, (k.astype(self.cdtype), v.astype(self.cdtype),
+            return h, (store(k), store(v),
                        kx.astype(self.cdtype), vx.astype(self.cdtype))
 
         x, (ck, cv, cxk, cxv) = jax.lax.scan(body, x, params["dec_blocks"])
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = dense(x[:, -1:], params["head"], "bsd,dv->bsv")
         cache = {"k": ck, "v": cv, "xk": cxk, "xv": cxv,
-                 "pos": jnp.array(S, jnp.int32)}
+                 "pos": jnp.full((B,), S, jnp.int32)}
         return logits, cache
 
     def decode_step(self, params, cache, tokens):
         cfg = self.cfg
         x = params["embed"].astype(self.cdtype)[tokens]
-        pos = cache["pos"]
-        positions = pos[None].astype(jnp.int32)
+        pos = cache["pos"]                                   # (B,)
+        positions = pos[:, None].astype(jnp.int32)
         T = cache["k"].shape[2]
 
         def body(carry, xs):
@@ -201,10 +215,8 @@ class EncDecLM:
             p = mod.constrain_tree(p, self._dec_layer())
             xn = rms_norm(h, p["ln1"], cfg.norm_eps)
             q, k, v = qkv(cfg, p["self_attn"], xn, positions)
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, pos, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, pos, 0, 0))
+            ck = ring_cache_update(ck, k, jnp.minimum(pos, T - 1))
+            cv = ring_cache_update(cv, v, jnp.minimum(pos, T - 1))
             o = chunked_attention(q, ck.astype(h.dtype), cv.astype(h.dtype),
                                   causal=True, q_offset=pos,
                                   kv_valid_len=pos + 1, chunk_kv=min(1024, T))

@@ -68,25 +68,70 @@ def softcap(x: jax.Array, cap: float) -> jax.Array:
     return cap * jnp.tanh(x / cap)
 
 
+def ring_cache_update(cache: jax.Array, new: jax.Array,
+                      slot: jax.Array) -> jax.Array:
+    """Write ``new`` (B, 1, ...) into ``cache`` (B, T, ...) at per-row ``slot``.
+
+    Each sequence in the batch carries its own write position (continuous
+    batching: slots are refilled independently), so the update is a per-row
+    dynamic_update_slice.
+    """
+    zeros = (jnp.int32(0),) * (cache.ndim - 2)
+
+    def row(c, x, s):
+        return jax.lax.dynamic_update_slice(c, x.astype(c.dtype), (s,) + zeros)
+
+    return jax.vmap(row)(cache, new, slot.astype(jnp.int32))
+
+
+def ring_cache_store(k: jax.Array, total: int, cache_len: int) -> jax.Array:
+    """Place the last min(total, cache_len) positions of ``k`` (B, S, ...)
+    into a cache_len-slot ring buffer so that slot ``p % cache_len`` holds
+    position ``p`` — the invariant decode's ring write (``ring_cache_update``
+    at ``pos % T``) relies on. Unused slots are zero-filled."""
+    S, T = total, cache_len
+    keep = min(S, T)
+    kk = k[:, S - keep:]
+    if T > keep:
+        kk = jnp.pad(kk, ((0, 0), (0, T - keep)) + ((0, 0),) * (k.ndim - 2))
+    shift = (S - keep) % T
+    return jnp.roll(kk, shift, axis=1) if shift else kk
+
+
+def ring_position_ids(batch: int, total: int, cache_len: int) -> jax.Array:
+    """(batch, cache_len) absolute positions matching ``ring_cache_store``'s
+    layout after a ``total``-token prefill; empty slots hold -1 (masked)."""
+    keep = min(total, cache_len)
+    ids = jnp.concatenate([
+        jnp.arange(total - keep, total, dtype=jnp.int32),
+        jnp.full((cache_len - keep,), -1, jnp.int32)])
+    shift = (total - keep) % cache_len
+    if shift:
+        ids = jnp.roll(ids, shift)
+    return jnp.tile(ids[None], (batch, 1))
+
+
 # ---------------------------------------------------------------------------
 # Chunked online-softmax attention (GQA, causal / sliding-window / cross)
 # ---------------------------------------------------------------------------
 def _attn_tile(qc, kc, vc, mask, m, l, acc, scale, cap):
     """One (q-tile, kv-tile) online-softmax update.
 
-    qc: (B, Cq, K, G, D)   kc/vc: (B, Ck, K, D)   mask: (Cq, Ck) bool
+    qc: (B, Cq, K, G, D)   kc/vc: (B, Ck, K, D)
+    mask: (Cq, Ck) bool, or (B, Cq, Ck) for per-sequence positions
     m, l: (B, K, G, Cq)    acc: (B, Cq, K, G, D)
     """
+    mb = mask[None, None, None] if mask.ndim == 2 else mask[:, None, None]
     s = jnp.einsum("bqkgd,bskd->bkgqs", qc, kc,
                    preferred_element_type=jnp.float32) * scale
     if cap > 0:
         s = softcap(s, cap)
-    s = jnp.where(mask[None, None, None, :, :], s, NEG_INF)
+    s = jnp.where(mb, s, NEG_INF)
     m_new = jnp.maximum(m, s.max(axis=-1))
     # guard fully-masked tiles: exp(NEG_INF - NEG_INF) would be 1
     safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
     p = jnp.exp(s - safe_m[..., None])
-    p = jnp.where(mask[None, None, None, :, :], p, 0.0)
+    p = jnp.where(mb, p, 0.0)
     alpha = jnp.where(m <= NEG_INF / 2, 0.0, jnp.exp(m - safe_m))
     l_new = l * alpha + p.sum(axis=-1)
     pv = jnp.einsum("bkgqs,bskd->bqkgd", p.astype(vc.dtype), vc,
@@ -102,9 +147,9 @@ def chunked_attention(
     *,
     causal: bool = True,
     window: int = 0,              # >0: sliding-window attention
-    q_offset: Any = 0,            # absolute position of q[0] (int or traced)
-    kv_positions: Optional[jax.Array] = None,  # (T,) absolute pos (ring caches)
-    kv_valid_len: Any = None,     # mask kv positions >= this (decode caches)
+    q_offset: Any = 0,            # position of q[0]: int, traced scalar, or (B,)
+    kv_positions: Optional[jax.Array] = None,  # (T,) or (B, T) abs positions
+    kv_valid_len: Any = None,     # mask kv positions >= this: scalar or (B,)
     chunk_q: int = 512,
     chunk_kv: int = 1024,
     attn_softcap: float = 0.0,
@@ -131,28 +176,56 @@ def chunked_attention(
     qg = q.reshape(B, nq, cq, Hkv, G, D)
     kg = k.reshape(B, nk, ck, Hkv, D)
     vg = v.reshape(B, nk, ck, Hkv, D)
-    if kv_positions is None:
+    # per-sequence positions (continuous batching: every slot has its own pos)
+    batched = (getattr(q_offset, "ndim", 0) >= 1
+               or (kv_positions is not None and kv_positions.ndim == 2)
+               or getattr(kv_valid_len, "ndim", 0) >= 1)
+    if batched:
+        q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+        if kv_positions is None:
+            kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+        else:
+            kv_pos = jnp.broadcast_to(kv_positions.astype(jnp.int32), (B, T))
+        kv_pos = kv_pos.reshape(B, nk, ck)
+        kv_valid = (None if kv_valid_len is None
+                    else jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32),
+                                          (B,)))
+    elif kv_positions is None:
         kv_pos = jnp.arange(T, dtype=jnp.int32).reshape(nk, ck)
     else:
         kv_pos = kv_positions.astype(jnp.int32).reshape(nk, ck)
 
     def q_chunk(i):
         qc = qg[:, i].astype(jnp.float32)  # fp32 q tile for stable softmax
-        q_pos = q_offset + i * cq + jnp.arange(cq, dtype=jnp.int32)
+        if batched:
+            q_pos = (q_off[:, None] + i * cq
+                     + jnp.arange(cq, dtype=jnp.int32)[None, :])   # (B, cq)
+        else:
+            q_pos = q_offset + i * cq + jnp.arange(cq, dtype=jnp.int32)
 
         def kv_step(carry, j):
             m, l, acc = carry
             kc = kg[:, j]
             vc = vg[:, j]
-            kp = kv_pos[j]
-            mask = jnp.ones((cq, ck), dtype=bool)
-            mask &= kp[None, :] >= 0
-            if causal:
-                mask &= kp[None, :] <= q_pos[:, None]
-            if window > 0:
-                mask &= kp[None, :] > q_pos[:, None] - window
-            if kv_valid_len is not None:
-                mask &= kp[None, :] < kv_valid_len
+            if batched:
+                kp = kv_pos[:, j]                                  # (B, ck)
+                mask = kp[:, None, :] >= 0                         # (B, cq, ck)
+                if causal:
+                    mask &= kp[:, None, :] <= q_pos[:, :, None]
+                if window > 0:
+                    mask &= kp[:, None, :] > q_pos[:, :, None] - window
+                if kv_valid is not None:
+                    mask &= kp[:, None, :] < kv_valid[:, None, None]
+            else:
+                kp = kv_pos[j]
+                mask = jnp.ones((cq, ck), dtype=bool)
+                mask &= kp[None, :] >= 0
+                if causal:
+                    mask &= kp[None, :] <= q_pos[:, None]
+                if window > 0:
+                    mask &= kp[None, :] > q_pos[:, None] - window
+                if kv_valid_len is not None:
+                    mask &= kp[None, :] < kv_valid_len
             m, l, acc = _attn_tile(qc.astype(k.dtype), kc, vc, mask, m, l, acc,
                                    scale, attn_softcap)
             return (m, l, acc), None

@@ -24,8 +24,10 @@ from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
-from repro.models.layers import (chunked_attention, dense, gated_mlp, rms_norm,
-                                 rope, softmax_xent)
+from repro.models.layers import (chunked_attention, dense, gated_mlp,
+                                 ring_cache_store, ring_cache_update,
+                                 ring_position_ids, rms_norm, rope,
+                                 softmax_xent)
 from repro.models.moe import moe_ffn, moe_param_specs
 
 
@@ -193,16 +195,23 @@ class TransformerLM:
         return {
             "k": jnp.zeros((L,) + kv, self.cdtype),
             "v": jnp.zeros((L,) + kv, self.cdtype),
-            "pos_ids": jnp.full((T,), -1, jnp.int32),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos_ids": jnp.full((batch, T), -1, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     def cache_logical_axes(self) -> Dict[str, Any]:
         kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
-        return {"k": kv, "v": kv, "pos_ids": ("cache_seq",), "pos": ()}
+        return {"k": kv, "v": kv, "pos_ids": ("act_batch", "cache_seq"),
+                "pos": ("act_batch",)}
 
-    def prefill(self, params, batch) -> Tuple[jax.Array, Dict[str, Any]]:
-        """Run the full prompt, return last-token logits + filled cache."""
+    def prefill(self, params, batch,
+                max_len: Optional[int] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+        """Run the full prompt, return last-token logits + filled cache.
+
+        With ``max_len`` the cache is pre-sized for ``max_len`` total positions
+        (ring-aligned so decode's ``pos % T`` writes land on the right slots)
+        — prefill -> decode involves zero cache copies or repads.
+        """
         cfg = self.cfg
         tokens = batch["tokens"]
         patch = batch.get("patch_embeds")
@@ -210,9 +219,12 @@ class TransformerLM:
         if patch is not None:
             x = jnp.concatenate([patch.astype(self.cdtype), x], axis=1)
         B, S, _ = x.shape
-        T = self.cache_len(S)
+        T = self.cache_len(max(max_len or S, S))
         positions = jnp.arange(S, dtype=jnp.int32)
         window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
+
+        def store(k):
+            return ring_cache_store(k.astype(self.cdtype), S, T)
 
         def body(carry, layer_p):
             h = carry
@@ -231,9 +243,7 @@ class TransformerLM:
                 y = gated_mlp(xn2, layer_p["mlp"]["wi_gate"],
                               layer_p["mlp"]["wi_up"], layer_p["mlp"]["wo"])
             h = h + y
-            # keep last T positions in cache
-            return h, (k[:, S - T:].astype(self.cdtype),
-                       v[:, S - T:].astype(self.cdtype))
+            return h, (store(k), store(v))
 
         if cfg.scan_layers:
             x, (ck, cv) = jax.lax.scan(body, x, params["blocks"])
@@ -250,21 +260,25 @@ class TransformerLM:
         logits = dense(x[:, -1:], head, "bsd,dv->bsv")
         cache = {
             "k": ck, "v": cv,
-            "pos_ids": jnp.arange(S - T, S, dtype=jnp.int32),
-            "pos": jnp.array(S, jnp.int32),
+            "pos_ids": ring_position_ids(B, S, T),
+            "pos": jnp.full((B,), S, jnp.int32),
         }
         return logits, cache
 
     def decode_step(self, params, cache, tokens: jax.Array):
-        """tokens: (B, 1). Appends one token; returns next-token logits."""
+        """tokens: (B, 1). Appends one token; returns next-token logits.
+
+        Positions are per-sequence (``pos``: (B,)) so continuous batching can
+        host sequences at different depths in one cache.
+        """
         cfg = self.cfg
         x = params["embed"].astype(self.cdtype)[tokens]          # (B,1,D)
-        pos = cache["pos"]
+        pos = cache["pos"]                                       # (B,)
         T = cache["k"].shape[2]
-        slot = (pos % T).astype(jnp.int32)
-        positions = pos[None].astype(jnp.int32)                  # (1,)
+        slot = (pos % T).astype(jnp.int32)                       # (B,)
+        positions = pos[:, None].astype(jnp.int32)               # (B, 1)
         window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
-        pos_ids = jax.lax.dynamic_update_slice(cache["pos_ids"], pos[None], (slot,))
+        pos_ids = ring_cache_update(cache["pos_ids"], pos[:, None], slot)
 
         def body(carry, xs):
             h = carry
@@ -272,10 +286,8 @@ class TransformerLM:
             layer_p = mod.constrain_tree(layer_p, self.block_specs())
             xn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
             q, k, v = qkv(cfg, layer_p["attn"], xn, positions)
-            ck = jax.lax.dynamic_update_slice(
-                ck, k.astype(ck.dtype), (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(
-                cv, v.astype(cv.dtype), (0, slot, 0, 0))
+            ck = ring_cache_update(ck, k, slot)
+            cv = ring_cache_update(cv, v, slot)
             o = chunked_attention(
                 q, ck.astype(h.dtype), cv.astype(h.dtype), causal=True,
                 window=window, q_offset=pos, kv_positions=pos_ids,

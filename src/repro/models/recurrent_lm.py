@@ -14,8 +14,9 @@ from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
-from repro.models.layers import (chunked_attention, dense, gated_mlp, rms_norm,
-                                 softmax_xent)
+from repro.models.layers import (chunked_attention, dense, gated_mlp,
+                                 ring_cache_store, ring_cache_update,
+                                 ring_position_ids, rms_norm, softmax_xent)
 from repro.models.model import attn_param_specs, mlp_param_specs, qkv
 from repro.models.rglru import (init_rglru_state, recurrent_block,
                                 rglru_param_specs)
@@ -88,11 +89,15 @@ class GriffinLM:
         return constrain(x, "act_batch", "act_seq", "act_embed"), new_state
 
     def _attn_layer(self, p, x, cache, pos, pos_ids):
-        """Local MQA. cache: (k, v) ring buffers or None (train)."""
+        """Local MQA. cache: (k, v) ring buffers or None (train).
+
+        In decode, ``pos`` is per-sequence (B,) so continuous batching can mix
+        sequences at different depths.
+        """
         cfg = self.cfg
         xn = rms_norm(x, p["ln1"], cfg.norm_eps)
         positions = (jnp.arange(x.shape[1], dtype=jnp.int32)
-                     if cache is None else pos[None].astype(jnp.int32))
+                     if cache is None else pos[:, None].astype(jnp.int32))
         q, k, v = qkv(cfg, p["attn"], xn, positions)
         new_cache = None
         if cache is None:
@@ -102,10 +107,8 @@ class GriffinLM:
             ck, cv = cache
             T = ck.shape[1]
             slot = (pos % T).astype(jnp.int32)
-            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
-                                              (0, slot, 0, 0))
-            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
-                                              (0, slot, 0, 0))
+            ck = ring_cache_update(ck, k, slot)
+            cv = ring_cache_update(cv, v, slot)
             o = chunked_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
                                   causal=True, window=cfg.local_window,
                                   q_offset=pos, kv_positions=pos_ids,
@@ -173,8 +176,8 @@ class GriffinLM:
             "k": jnp.zeros((G,) + kv, self.cdtype),
             "v": jnp.zeros((G,) + kv, self.cdtype),
             "tail": [self._rec_state_zero(batch) for _ in range(self.n_tail)],
-            "pos_ids": jnp.full((T,), -1, jnp.int32),
-            "pos": jnp.zeros((), jnp.int32),
+            "pos_ids": jnp.full((batch, T), -1, jnp.int32),
+            "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     def cache_logical_axes(self):
@@ -186,15 +189,18 @@ class GriffinLM:
             "tail": [{"h": ("act_batch", "act_embed"),
                       "conv": ("act_batch", None, "act_embed")}
                      for _ in range(self.n_tail)],
-            "pos_ids": ("cache_seq",), "pos": (),
+            "pos_ids": ("act_batch", "cache_seq"), "pos": ("act_batch",),
         }
 
-    def prefill(self, params, batch):
+    def prefill(self, params, batch, max_len=None):
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
-        T = self.cache_len(S)
+        T = self.cache_len(max(max_len or S, S))
         x = params["embed"].astype(self.cdtype)[tokens]
+
+        def store(k):
+            return ring_cache_store(k.astype(self.cdtype), S, T)
 
         def group_body(carry, gp):
             h = carry
@@ -212,8 +218,7 @@ class GriffinLM:
                               gp["attn"]["mlp"]["wi_gate"],
                               gp["attn"]["mlp"]["wi_up"],
                               gp["attn"]["mlp"]["wo"])
-            return h, (s1, s2, k[:, S - T:].astype(self.cdtype),
-                       v[:, S - T:].astype(self.cdtype))
+            return h, (s1, s2, store(k), store(v))
 
         x, (s1, s2, ck, cv) = jax.lax.scan(group_body, x, params["groups"])
         tail_states = []
@@ -224,18 +229,18 @@ class GriffinLM:
         logits = dense(x[:, -1:], params["embed"].T, "bsd,dv->bsv")
         cache = {
             "rec1": s1, "rec2": s2, "k": ck, "v": cv, "tail": tail_states,
-            "pos_ids": jnp.arange(S - T, S, dtype=jnp.int32),
-            "pos": jnp.array(S, jnp.int32),
+            "pos_ids": ring_position_ids(B, S, T),
+            "pos": jnp.full((B,), S, jnp.int32),
         }
         return logits, cache
 
     def decode_step(self, params, cache, tokens):
         cfg = self.cfg
         x = params["embed"].astype(self.cdtype)[tokens]      # (B,1,D)
-        pos = cache["pos"]
+        pos = cache["pos"]                                   # (B,)
         T = cache["k"].shape[2]
         slot = (pos % T).astype(jnp.int32)
-        pos_ids = jax.lax.dynamic_update_slice(cache["pos_ids"], pos[None], (slot,))
+        pos_ids = ring_cache_update(cache["pos_ids"], pos[:, None], slot)
 
         def group_body(carry, xs):
             h = carry
@@ -332,7 +337,7 @@ class XLSTMLM:
                 states.append(init_slstm_state(cfg, batch))
             else:
                 states.append(init_mlstm_state(cfg, batch))
-        return {"blocks": states, "pos": jnp.zeros((), jnp.int32)}
+        return {"blocks": states, "pos": jnp.zeros((batch,), jnp.int32)}
 
     def cache_logical_axes(self):
         cfg = self.cfg
@@ -347,9 +352,10 @@ class XLSTMLM:
                     "n": ("act_batch", "act_heads", "act_hd"),
                     "m": ("act_batch", "act_heads"),
                 })
-        return {"blocks": states, "pos": ()}
+        return {"blocks": states, "pos": ("act_batch",)}
 
-    def prefill(self, params, batch):
+    def prefill(self, params, batch, max_len=None):
+        # recurrent state is O(1) in sequence length: max_len is irrelevant
         cfg = self.cfg
         tokens = batch["tokens"]
         x = params["embed"].astype(self.cdtype)[tokens]
@@ -362,7 +368,8 @@ class XLSTMLM:
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         logits = dense(x[:, -1:], params["embed"].T, "bsd,dv->bsv")
         return logits, {"blocks": states,
-                        "pos": jnp.array(tokens.shape[1], jnp.int32)}
+                        "pos": jnp.full((tokens.shape[0],), tokens.shape[1],
+                                        jnp.int32)}
 
     def decode_step(self, params, cache, tokens):
         cfg = self.cfg

@@ -122,6 +122,28 @@ def test_cost_model_respects_error_budget():
     assert cm.select(10 ** 9, err_budget=1e-6).name == "bf16"
 
 
+def test_required_bits_float_data_aware(rng):
+    """Uniform-magnitude blocks admit narrower formats than spiky ones."""
+    uniform = jnp.ones((1024,)) * 0.5
+    spiky = jnp.ones((1024,)).at[::256].set(1e4) * 0.5
+    b_uni = int(proteus.required_bits_float(uniform, block=256, rtol=1e-2))
+    b_spiky = int(proteus.required_bits_float(spiky, block=256, rtol=1e-2))
+    assert b_uni < b_spiky
+    # uniform blocks: crest factor 1 -> the analytic minimum for rtol=1e-2
+    assert b_uni == 7
+
+
+def test_select_for_tensor_data_aware(rng):
+    """Same size + budget, different data -> different representation."""
+    cm = proteus.CostModel()
+    uniform = jnp.ones((1 << 20,), jnp.float32) * 3.0
+    spiky = jax.random.normal(rng, (1 << 20,), jnp.float32) ** 5
+    r_uni = cm.select_for_tensor(uniform, err_budget=5e-3)
+    r_spiky = cm.select_for_tensor(spiky, err_budget=5e-3)
+    assert r_uni.bits < 16          # block scale absorbs the uniform range
+    assert r_spiky.bits > r_uni.bits
+
+
 def test_bucketize(rng):
     tree = {"a": jnp.zeros((1024, 256)), "b": jnp.zeros((8,)),
             "c": jnp.zeros((2048, 512))}
@@ -159,6 +181,26 @@ def test_dappa_window():
     ref = np.convolve(np.arange(8.0), np.ones(3), mode="valid")
     np.testing.assert_allclose(out[:6], ref)
     assert (out[6:] == 0).all()  # masked tail filled
+
+
+@pytest.mark.parametrize("w,shape", [(2, (16,)), (5, (16,)), (4, (12, 3))])
+def test_dappa_window_gather_matches_stacked_shifts(w, shape):
+    """The single-gather window lowering == the w-shifted-copies reference
+    (old jnp.stack path), for scalar and multi-dim stream elements."""
+    xs = jnp.asarray(np.random.default_rng(0).standard_normal(shape),
+                     jnp.float32)
+    f = dappa.compile_pipeline(
+        dappa.input_stream("x").window(w, lambda win: win))
+    out = np.asarray(f(x=xs))
+    # reference: w explicitly materialized shifted copies, stacked on last axis
+    pad = jnp.zeros((w - 1,) + xs.shape[1:], xs.dtype)
+    ext = jnp.concatenate([xs, pad], axis=0)
+    n = xs.shape[0]
+    ref = jnp.stack([ext[i: i + n] for i in range(w)], axis=-1)
+    valid = np.arange(n) <= n - w
+    np.testing.assert_array_equal(out[valid],
+                                  np.asarray(ref)[valid])
+    assert (out[~valid] == 0).all()
 
 
 # ---------------------------------------------------------------------------

@@ -66,7 +66,10 @@ def test_prefill_decode_consistency(arch):
     assert logits_dec.shape[0] == B and logits_dec.shape[1] == 1
     assert logits_dec.shape[-1] == cfg.vocab_size
     assert bool(jnp.isfinite(logits_dec.astype(jnp.float32)).all()), arch
-    assert int(cache2["pos"]) == int(cache["pos"]) + 1
+    # per-sequence positions (continuous batching): pos is (B,)
+    assert cache2["pos"].shape == (B,)
+    np.testing.assert_array_equal(np.asarray(cache2["pos"]),
+                                  np.asarray(cache["pos"]) + 1)
 
 
 def test_microbatched_step_matches_full():
