@@ -1,9 +1,14 @@
-"""Per-kernel benchmark: interpret-mode correctness + analytic TPU roofline.
+"""Per-kernel benchmark: interpret-mode parity gates + analytic TPU roofline.
 
-Wall-clock on this CPU container is meaningless for TPU kernels, so we
-report (a) correctness vs ref oracles and (b) the analytic per-tile roofline
-(VMEM working set, arithmetic intensity, projected % of v5e peak) that the
-BlockSpec tiling implies — the numbers the §Perf kernel substitutions use.
+Wall-clock on this CPU container is meaningless for TPU kernels, so each
+flash-attention cell (causal / window / GQA / softcap / decode / odd-length)
+reports (a) max |pallas - oracle| on a small shape — a hard parity gate, the
+bench fails if it exceeds tolerance — and (b) the analytic per-cell roofline
+on the production shape: HBM bytes for the Pallas kernel (scores never leave
+VMEM; kv read once per *kv* head) vs the jnp chunked path (whose per-kv-step
+fp32 (m, l, acc) scan carries round-trip through HBM), arithmetic intensity,
+and the resulting memory-traffic advantage. ``report.py --kernels-csv``
+distills these rows into the committed ``BENCH_kernels.json``.
 """
 from __future__ import annotations
 
@@ -16,26 +21,123 @@ import numpy as np
 from repro.core.damov import HBM_BW, PEAK_FLOPS_BF16
 
 VMEM_BYTES = 128 * 1024 * 1024  # ~128MB v5e VMEM (usable ~half)
+TOL = 2e-5                      # fp32 interpret-mode parity gate
 
 
-def _flash_tile_analysis(bq, bk, d, dtype_bytes=2):
-    flops = 2 * bq * bk * d * 2              # qk^T + pv
-    # q read + k/v reads + output write, all in HBM bytes
-    hbm = (bq * d + 2 * bk * d) * dtype_bytes + bq * d * dtype_bytes
-    ai = flops / hbm
+# ---------------------------------------------------------------------------
+# Analytic roofline: Pallas tiling vs jnp chunked path, per production cell
+# ---------------------------------------------------------------------------
+def _attn_roofline(B, S, T, Hq, Hkv, D, ck, dtype_bytes=2):
+    """HBM-byte model, three lowerings of the same attention cell.
+
+    * pallas: q/out once per q head, kv once per *kv* head (GQA tiles shared
+      in VMEM), scores never leave VMEM.
+    * chunked (the jnp ``flash_attention_jnp`` path): same streams plus the
+      per-kv-step fp32 online-softmax carries (m, l, acc) written+read by the
+      lax.scan across kv chunks — the O(S*T/ck) live-fp32 term DAMOV flags
+      for train/prefill. At decode (S=1) this term is tiny: chunked decode is
+      already near the KV-bandwidth floor.
+    * naive (score-materializing lowering — what the cell costs without any
+      online-softmax structure): adds 4 HBM passes over the fp32 score/prob
+      tensor. Dominant for decode on MQA/GQA caches, where the score tensor
+      (per *q* head) rivals the kv stream (per *kv* head) — the decode cells'
+      memory-traffic advantage lives here.
+    """
+    flops = 4 * B * S * T * Hq * D                   # qk^T + pv
+    q_io = B * S * Hq * D * dtype_bytes
+    out_io = B * S * Hq * D * dtype_bytes
+    kv_io = 2 * B * T * Hkv * D * dtype_bytes
+    pallas = q_io + kv_io + out_io
+    nk = -(-T // ck)
+    carry = (B * S * Hq * D + 2 * B * S * Hq) * 4    # fp32 acc + (m, l)
+    chunked = pallas + 2 * carry * nk                # write + read per step
+    naive = pallas + 4 * B * Hq * S * T * 4          # s, p: write + read each
+    ai = flops / pallas
     ridge = PEAK_FLOPS_BF16 / HBM_BW
-    frac = min(1.0, ai / ridge)
-    vmem = (bq * d + 2 * bk * d + bq * bk) * 4 + bq * d * 4
-    return flops, hbm, ai, frac, vmem
+    return {
+        "flops": flops, "bytes_pallas": pallas, "bytes_chunked": chunked,
+        "bytes_naive": naive, "traffic_x": chunked / pallas,
+        "naive_x": naive / pallas, "ai": ai,
+        "proj_peak": min(1.0, ai / ridge),
+        "mem_s_pallas": pallas / HBM_BW, "mem_s_chunked": chunked / HBM_BW,
+    }
+
+
+# (name, parity-shape kwargs, production-roofline kwargs)
+_PROD_PREFILL = dict(B=8, S=4096, T=4096, Hq=16, Hkv=16, D=128, ck=1024)
+CELLS = [
+    ("causal", dict(causal=True), _PROD_PREFILL),
+    ("window", dict(causal=True, window=64), _PROD_PREFILL),
+    ("gqa", dict(causal=True, Hq=8, Hkv=2),
+     dict(_PROD_PREFILL, Hq=32, Hkv=8)),
+    ("softcap", dict(causal=True, softcap=30.0), _PROD_PREFILL),
+    ("odd_len", dict(causal=True, S=100, T=100), _PROD_PREFILL),
+    # the serving engine's inner loop: 1 new token vs a 32k ring cache
+    ("decode", dict(decode=True),
+     dict(B=64, S=1, T=32768, Hq=32, Hkv=8, D=128, ck=1024)),
+    # MQA decode (Griffin-style local attention ring cache): the score
+    # tensor is per *q* head while kv is per *kv* head, so the
+    # score-materializing lowering doubles HBM traffic vs the Pallas kernel
+    ("decode_mqa", dict(decode=True, Hkv=1),
+     dict(B=64, S=1, T=2048, Hq=32, Hkv=1, D=128, ck=1024)),
+]
+
+
+def _parity_err(spec) -> float:
+    from repro.models.layers import (attention_ref, chunked_attention,
+                                     ring_cache_store, ring_position_ids)
+
+    B, D = 2, 32
+    S = spec.get("S", 128)
+    T = spec.get("T", 128)
+    Hq = spec.get("Hq", 4)
+    Hkv = spec.get("Hkv", 4)
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D))
+    k = jax.random.normal(ks[1], (B, T, Hkv, D))
+    v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    if spec.get("decode"):
+        cache_len, total = 64, 96       # ring cache wrapped past one lap
+        kc = ring_cache_store(k[:, :total], total, cache_len)
+        vc = ring_cache_store(v[:, :total], total, cache_len)
+        pos_ids = ring_position_ids(B, total, cache_len)
+        pos = jnp.full((B,), total, jnp.int32)
+        args = dict(causal=True, q_offset=pos, kv_positions=pos_ids,
+                    chunk_kv=32)
+        out = chunked_attention(q[:, :1], kc, vc, impl="pallas", **args)
+        ref = chunked_attention(q[:, :1], kc, vc, impl="jnp", **args)
+    else:
+        args = dict(causal=spec.get("causal", True),
+                    window=spec.get("window", 0),
+                    attn_softcap=spec.get("softcap", 0.0),
+                    chunk_q=64, chunk_kv=64)
+        out = chunked_attention(q, k, v, impl="pallas", **args)
+        ref = attention_ref(q, k, v, causal=args["causal"],
+                            window=args["window"],
+                            attn_softcap=args["attn_softcap"])
+    return float(np.abs(np.asarray(out, np.float32)
+                        - np.asarray(ref, np.float32)).max())
 
 
 def run(emit) -> None:
-    # flash attention tiles
-    for (bq, bk, d) in [(128, 128, 128), (256, 512, 128), (512, 1024, 128)]:
-        fl, hb, ai, frac, vmem = _flash_tile_analysis(bq, bk, d)
-        emit(f"kernels/flash/tile{bq}x{bk}x{d}", 0,
-             f"AI={ai:.0f}flops/B;proj_peak={100*frac:.0f}%;"
-             f"VMEM={vmem/2**20:.1f}MB;fits={vmem < VMEM_BYTES//2}")
+    # flash attention: per-cell parity gate + production roofline
+    failures = []
+    for name, parity_spec, prod in CELLS:
+        t0 = time.perf_counter()
+        err = _parity_err(parity_spec)
+        us = (time.perf_counter() - t0) * 1e6
+        ok = err <= TOL
+        if not ok:
+            failures.append((name, err))
+        r = _attn_roofline(**prod)
+        emit(f"kernels/flash/{name}", us,
+             f"max_err={err:.2e};pass={ok};ai={r['ai']:.0f};"
+             f"proj_peak={100 * r['proj_peak']:.0f}%;"
+             f"bytes_pallas={r['bytes_pallas']};"
+             f"bytes_chunked={r['bytes_chunked']};"
+             f"bytes_naive={r['bytes_naive']};"
+             f"traffic_x={r['traffic_x']:.2f};"
+             f"naive_x={r['naive_x']:.2f}")
     # quant matmul: weight-bytes reduction at the roofline
     for bits in (16, 8, 4):
         # decode GEMV regime: M=1 batch row, bandwidth-bound on weights
@@ -46,18 +148,8 @@ def run(emit) -> None:
              f"weight-stream time for {d}x{f} layer; "
              f"{16 / bits:.1f}x faster than bf16" if bits != 16 else
              f"weight-stream time for {d}x{f} layer (bf16 baseline)")
-    # measured interpret-mode sanity timings (correctness path only)
-    from repro.kernels.flash_attention import flash_attention
-    q = jax.random.normal(jax.random.PRNGKey(0), (1, 256, 2, 64))
-    k = jax.random.normal(jax.random.PRNGKey(1), (1, 256, 2, 64))
-    v = jax.random.normal(jax.random.PRNGKey(2), (1, 256, 2, 64))
-    out = flash_attention(q, k, v, interpret=True)
-    jax.block_until_ready(out)
-    t0 = time.perf_counter()
-    out = flash_attention(q, k, v, interpret=True)
-    jax.block_until_ready(out)
-    emit("kernels/flash/interpret_us", (time.perf_counter() - t0) * 1e6,
-         "interpret-mode validation path (CPU; not TPU perf)")
+    if failures:
+        raise RuntimeError(f"flash parity gate failed: {failures}")
 
 
 if __name__ == "__main__":

@@ -1,9 +1,12 @@
 """Generate EXPERIMENTS.md §Dry-run + §Roofline tables from results JSONs,
-and BENCH_serve.json (serving perf trajectory) from the bench CSV.
+and the perf-trajectory JSONs (BENCH_serve.json / BENCH_kernels.json) from
+the bench CSV.
 
     PYTHONPATH=src python -m benchmarks.report [--results DIR] [--tag TAG]
     PYTHONPATH=src python -m benchmarks.report --serve-csv bench.csv \
         [--bench-json BENCH_serve.json]
+    PYTHONPATH=src python -m benchmarks.report --kernels-csv bench.csv \
+        [--kernels-json BENCH_kernels.json]
 """
 from __future__ import annotations
 
@@ -146,6 +149,47 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
     return out
 
 
+def parse_kernels_csv(csv_path: str) -> Dict[str, Dict[str, object]]:
+    """Parse ``kernels/flash/...`` rows into one dict per cell.
+
+    Rows look like ``kernels/flash/gqa,12.3,max_err=1.2e-06;pass=True;...``
+    — the derived column is ``key=value`` pairs separated by ``;``. Numeric
+    values are floated; ``pass`` becomes a bool.
+    """
+    out: Dict[str, Dict[str, object]] = {}
+    with open(csv_path) as f:
+        for line in f:
+            if not line.startswith("kernels/flash/"):
+                continue
+            name, _, derived = line.strip().split(",", 2)
+            cell = name[len("kernels/flash/"):]
+            if cell.startswith("_"):      # harness bookkeeping
+                continue
+            row: Dict[str, object] = {}
+            for kv in derived.split(";"):
+                if "=" not in kv:
+                    continue
+                k, v = kv.split("=", 1)
+                if k == "pass":
+                    row[k] = v == "True"
+                    continue
+                try:
+                    row[k] = float(v.rstrip("%"))
+                except ValueError:
+                    row[k] = v
+            if row:
+                out[cell] = row
+    return out
+
+
+def write_bench_kernels(csv_path: str, json_path: str) -> None:
+    data = parse_kernels_csv(csv_path)
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {json_path}: {len(data)} kernel cells")
+
+
 def write_bench_serve(csv_path: str, json_path: str) -> None:
     data = parse_serve_csv(csv_path)
     with open(json_path, "w") as f:
@@ -163,9 +207,15 @@ def main() -> None:
     ap.add_argument("--serve-csv", default=None,
                     help="run.py CSV to distill into BENCH_serve.json")
     ap.add_argument("--bench-json", default="BENCH_serve.json")
+    ap.add_argument("--kernels-csv", default=None,
+                    help="run.py CSV to distill into BENCH_kernels.json")
+    ap.add_argument("--kernels-json", default="BENCH_kernels.json")
     args = ap.parse_args()
-    if args.serve_csv:
-        write_bench_serve(args.serve_csv, args.bench_json)
+    if args.serve_csv or args.kernels_csv:
+        if args.serve_csv:
+            write_bench_serve(args.serve_csv, args.bench_json)
+        if args.kernels_csv:
+            write_bench_kernels(args.kernels_csv, args.kernels_json)
         return
     rows = load(args.results, args.tag)
     single = [r for r in rows if not r.get("multi_pod")]

@@ -73,6 +73,7 @@ __all__ = [
     "import_pallas",
     "import_pallas_tpu",
     "pallas_call",
+    "pallas_vmem_scratch",
     "tree_map",
     "tree_leaves",
     "tree_flatten",
@@ -436,6 +437,21 @@ def import_pallas_tpu():
 def pallas_call(*args, **kwargs):
     """Late-bound pl.pallas_call (resolves against the installed pallas)."""
     return import_pallas().pallas_call(*args, **kwargs)
+
+
+def pallas_vmem_scratch(shape: Tuple[int, ...], dtype):
+    """A VMEM scratch allocation for ``pallas_call(scratch_shapes=...)``.
+
+    Uses ``pltpu.VMEM`` when the install has TPU Pallas; otherwise falls back
+    to the generic ANY-space ``pl.MemoryRef``, which the interpreter accepts —
+    so kernels carrying accumulators in scratch still run (interpret mode) on
+    installs without the TPU plugin instead of dereferencing a None module.
+    """
+    pltpu = import_pallas_tpu()
+    if pltpu is not None:
+        return pltpu.VMEM(tuple(shape), dtype)
+    pl = import_pallas()
+    return pl.MemoryRef(tuple(shape), dtype, pl.MemorySpace.ANY)
 
 
 # ---------------------------------------------------------------------------

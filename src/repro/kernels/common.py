@@ -1,9 +1,31 @@
-"""Shared kernel utilities: interpret-mode selection."""
+"""Shared kernel utilities: interpret-mode / attention-backend selection and
+pad-to-block-multiple helpers (one sentinel convention for every caller)."""
 from __future__ import annotations
 
 import os
 
 import jax
+import jax.numpy as jnp
+
+ATTN_IMPLS = ("auto", "pallas", "jnp")
+
+
+def pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
+    """Zero-pad ``axis`` of ``x`` up to length ``to`` (no-op if already)."""
+    if x.shape[axis] == to:
+        return x
+    pads = [(0, 0)] * x.ndim
+    pads[axis] = (0, to - x.shape[axis])
+    return jnp.pad(x, pads)
+
+
+def pad_positions(pos: jax.Array, to: int) -> jax.Array:
+    """Pad the last axis of an int position array ((N,) or (B, N)) up to
+    ``to`` with the -1 sentinel every mask treats as invalid/empty."""
+    if pos.shape[-1] == to:
+        return pos
+    pads = [(0, 0)] * (pos.ndim - 1) + [(0, to - pos.shape[-1])]
+    return jnp.pad(pos, pads, constant_values=-1)
 
 
 def use_interpret() -> bool:
@@ -11,3 +33,20 @@ def use_interpret() -> bool:
     if os.environ.get("REPRO_PALLAS_INTERPRET"):
         return os.environ["REPRO_PALLAS_INTERPRET"] != "0"
     return jax.default_backend() != "tpu"
+
+
+def attn_impl() -> str:
+    """Attention backend for ``chunked_attention``: 'pallas' or 'jnp'.
+
+    ``REPRO_ATTN_IMPL=pallas|jnp|auto`` (default auto = compiled Pallas on
+    TPU, jnp elsewhere). ``pallas`` off-TPU runs in interpret mode unless
+    ``REPRO_PALLAS_INTERPRET=0``. Read at trace time: set the knob before
+    building jitted programs (the launchers plumb ``--attn-impl`` here).
+    """
+    v = os.environ.get("REPRO_ATTN_IMPL", "auto").lower()
+    if v not in ATTN_IMPLS:
+        raise ValueError(
+            f"REPRO_ATTN_IMPL={v!r}: expected one of {ATTN_IMPLS}")
+    if v == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return v

@@ -1,4 +1,11 @@
-from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.kernel import (flash_attention_bh,
+                                                 flash_attention_fwd,
+                                                 flash_decode_fwd)
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_gqa_fwd,
+                                               flash_decode)
 from repro.kernels.flash_attention.ref import attention_ref_bh
 
-__all__ = ["flash_attention", "attention_ref_bh"]
+__all__ = ["flash_attention", "flash_attention_gqa_fwd", "flash_decode",
+           "flash_attention_bh", "flash_attention_fwd", "flash_decode_fwd",
+           "attention_ref_bh"]

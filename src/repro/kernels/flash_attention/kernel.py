@@ -1,12 +1,26 @@
-"""Flash attention Pallas TPU kernel: tiled online softmax.
+"""Flash attention Pallas TPU kernels: tiled online softmax, GQA-native.
 
-Processing-using-memory principle on the HBM->VMEM hierarchy: the (bq x bk)
-score tile lives only in VMEM; scores never round-trip to HBM (the jnp
-chunked path materializes them — this kernel removes the dominant memory-term
-contribution found by DAMOV for train/prefill cells).
+Processing-using-memory principle on the HBM->VMEM hierarchy: the score tile
+lives only in VMEM; scores never round-trip to HBM (the jnp chunked path
+materializes them — this kernel removes the dominant memory-term contribution
+found by DAMOV for train/prefill cells, and the KV-stream term for decode).
 
-Grid: (batch*heads, q_blocks, kv_blocks), kv minor => sequential on TPU;
-running (m, l, acc) carried in VMEM scratch across kv steps.
+Two entry points share one tile-update body:
+
+* ``flash_attention_fwd`` — prefill/train. Grid ``(B, Hkv, nq, nk)``, kv
+  minor => sequential on TPU; the ``G = Hq // Hkv`` grouped query heads of
+  one kv head ride in the q block, so each (k, v) tile is fetched from HBM
+  once per kv head, not once per query head (GQA without materializing
+  ``jnp.repeat`` copies). Emits ``(out, lse)`` so a recompute backward can
+  run without saved score tiles.
+* ``flash_decode_fwd`` — serving. Small q (the fused-decode chunk step)
+  against the ring KV cache; grid ``(B, Hkv, nk)`` over kv blocks only, the
+  whole (G, S) query block resident in VMEM across the kv stream.
+
+Masking is position-based everywhere: per-row absolute q positions
+``(B, S)`` and per-slot kv positions ``(B, T)`` (-1 = empty/invalid slot)
+subsume causal/window/ring-cache/valid-length and pad-to-block masking in
+one rule, so both kernels serve every model family and the serving engine.
 """
 from __future__ import annotations
 
@@ -15,96 +29,203 @@ import math
 
 import jax
 import jax.numpy as jnp
-from repro.compat import import_pallas, import_pallas_tpu
+
+from repro.compat import import_pallas, pallas_vmem_scratch
+from repro.kernels.common import pad_axis
 
 pl = import_pallas()
-pltpu = import_pallas_tpu()  # None when this install lacks TPU pallas
 
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
-                  scale: float, causal: bool, window: int, block_q: int,
-                  block_k: int, n_kv_blocks: int):
-    qi = pl.program_id(1)
-    ki = pl.program_id(2)
+def _tile_update(q, k, v, qp, kp, m_ref, l_ref, acc_ref, *, scale: float,
+                 causal: bool, window: int, softcap: float):
+    """One (G, bq) x (bk) online-softmax update.
+
+    q: (G, bq, D) f32   k/v: (bk, D) f32
+    qp: (bq,) int32 absolute q positions (-1 = padded row)
+    kp: (bk,) int32 absolute kv positions (-1 = empty/padded/invalid slot)
+    m/l: (G, bq) f32 scratch   acc: (G, bq, D) f32 scratch
+    """
+    s = jax.lax.dot_general(q, k, (((2,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    if softcap > 0:
+        s = softcap * jnp.tanh(s / softcap)
+    mask = (kp[None, :] >= 0) & (qp[:, None] >= 0)
+    if causal:
+        mask &= kp[None, :] <= qp[:, None]
+    if window > 0:
+        mask &= kp[None, :] > qp[:, None] - window
+    mb = mask[None]                                    # (1, bq, bk)
+    s = jnp.where(mb, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=2))
+    # guard fully-masked rows: exp(NEG_INF - NEG_INF) would be 1
+    safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
+    p = jnp.exp(s - safe_m[..., None])
+    p = jnp.where(mb, p, 0.0)
+    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - safe_m))
+    l_new = l_ref[...] * alpha + p.sum(axis=2)
+    acc_ref[...] = acc_ref[...] * alpha[..., None] + jax.lax.dot_general(
+        p, v, (((2,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+
+def _tile_init(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
+def _tile_finalize(o_ref, lse_ref, m_ref, l_ref, acc_ref):
+    l = l_ref[...]
+    lsafe = jnp.where(l == 0.0, 1.0, l)
+    o_ref[0, 0] = (acc_ref[...] / lsafe[..., None]).astype(o_ref.dtype)
+    m = m_ref[...]
+    lse_ref[0, 0] = jnp.where(m <= NEG_INF / 2, NEG_INF, m + jnp.log(lsafe))
+
+
+def _flash_kernel(qp_ref, kp_ref, q_ref, k_ref, v_ref, o_ref, lse_ref,
+                  m_ref, l_ref, acc_ref, *, scale: float, causal: bool,
+                  window: int, softcap: float, kv_axis: int, n_kv: int):
+    ki = pl.program_id(kv_axis)
 
     @pl.when(ki == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _tile_init(m_ref, l_ref, acc_ref)
 
-    q = q_ref[0].astype(jnp.float32)                  # (bq, d)
-    k = k_ref[0].astype(jnp.float32)                  # (bk, d)
-    v = v_ref[0].astype(jnp.float32)
+    _tile_update(q_ref[0, 0].astype(jnp.float32),
+                 k_ref[0, 0].astype(jnp.float32),
+                 v_ref[0, 0].astype(jnp.float32),
+                 qp_ref[0], kp_ref[0], m_ref, l_ref, acc_ref,
+                 scale=scale, causal=causal, window=window, softcap=softcap)
 
-    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                            preferred_element_type=jnp.float32) * scale
-    q_pos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q,
-                                                                block_k), 0)
-    k_pos = ki * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q,
-                                                                block_k), 1)
-    mask = jnp.ones((block_q, block_k), jnp.bool_)
-    if causal:
-        mask &= k_pos <= q_pos
-    if window > 0:
-        mask &= k_pos > q_pos - window
-    s = jnp.where(mask, s, NEG_INF)
-
-    m_prev = m_ref[...]
-    l_prev = l_ref[...]
-    m_new = jnp.maximum(m_prev, s.max(axis=1))
-    safe_m = jnp.where(m_new <= NEG_INF / 2, 0.0, m_new)
-    p = jnp.exp(s - safe_m[:, None])
-    p = jnp.where(mask, p, 0.0)
-    alpha = jnp.where(m_prev <= NEG_INF / 2, 0.0, jnp.exp(m_prev - safe_m))
-    l_new = l_prev * alpha + p.sum(axis=1)
-    acc = acc_ref[...] * alpha[:, None] + jax.lax.dot_general(
-        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
-        preferred_element_type=jnp.float32)
-    m_ref[...] = m_new
-    l_ref[...] = l_new
-    acc_ref[...] = acc
-
-    @pl.when(ki == n_kv_blocks - 1)
+    @pl.when(ki == n_kv - 1)
     def _finalize():
-        l = l_new
-        l = jnp.where(l == 0.0, 1.0, l)
-        o_ref[0, ...] = (acc / l[:, None]).astype(o_ref.dtype)
+        _tile_finalize(o_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def flash_attention_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                        q_positions: jax.Array, kv_positions: jax.Array, *,
+                        causal: bool = True, window: int = 0,
+                        softcap: float = 0.0, block_q: int = 128,
+                        block_k: int = 128, interpret: bool = True):
+    """Prefill/train kernel. Shapes (already padded to block multiples):
+
+    q: (B, Hkv, G, S, D)   k/v: (B, Hkv, T, D)
+    q_positions: (B, S) int32   kv_positions: (B, T) int32 (-1 = masked)
+    Returns (out (B, Hkv, G, S, D), lse (B, Hkv, G, S) f32).
+    """
+    B, Hkv, G, S, D = q.shape
+    T = k.shape[2]
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
+    nq, nk = S // bq, T // bk
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        softcap=softcap, kv_axis=3, n_kv=nk)
+    out, lse = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, i, j: (b, i)),
+            pl.BlockSpec((1, bk), lambda b, h, i, j: (b, j)),
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, i, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, bq, D), lambda b, h, i, j: (b, h, 0, i, 0)),
+            pl.BlockSpec((1, 1, G, bq), lambda b, h, i, j: (b, h, 0, i)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pallas_vmem_scratch((G, bq), jnp.float32),
+            pallas_vmem_scratch((G, bq), jnp.float32),
+            pallas_vmem_scratch((G, bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, q, k, v)
+    return out, lse
+
+
+def flash_decode_fwd(q: jax.Array, k: jax.Array, v: jax.Array,
+                     q_positions: jax.Array, kv_positions: jax.Array, *,
+                     causal: bool = True, window: int = 0,
+                     softcap: float = 0.0, block_k: int = 128,
+                     interpret: bool = True) -> jax.Array:
+    """Decode kernel: the serving engine's per-chunk inner loop.
+
+    The whole small-q block (one scan step of the fused decode loop) stays in
+    VMEM while the ring KV cache streams through; grid over kv blocks only.
+
+    q: (B, Hkv, G, S, D) with small S   k/v: (B, Hkv, T, D), T % block_k == 0
+    q_positions: (B, S) per-sequence positions (continuous batching)
+    kv_positions: (B, T) per-slot ring-cache positions (-1 = empty slot)
+    Returns out (B, Hkv, G, S, D).
+    """
+    B, Hkv, G, S, D = q.shape
+    T = k.shape[2]
+    bk = min(block_k, T)
+    assert T % bk == 0, (T, bk)
+    nk = T // bk
+    kernel = functools.partial(
+        _flash_kernel, scale=1.0 / math.sqrt(D), causal=causal, window=window,
+        softcap=softcap, kv_axis=2, n_kv=nk)
+    out, _ = pl.pallas_call(
+        kernel,
+        grid=(B, Hkv, nk),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda b, h, j: (b, 0)),
+            pl.BlockSpec((1, bk), lambda b, h, j: (b, j)),
+            pl.BlockSpec((1, 1, G, S, D), lambda b, h, j: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+            pl.BlockSpec((1, 1, bk, D), lambda b, h, j: (b, h, j, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, S, D), lambda b, h, j: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, G, S), lambda b, h, j: (b, h, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, S), jnp.float32),
+        ],
+        scratch_shapes=[
+            pallas_vmem_scratch((G, S), jnp.float32),
+            pallas_vmem_scratch((G, S), jnp.float32),
+            pallas_vmem_scratch((G, S, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, q, k, v)
+    return out
 
 
 def flash_attention_bh(q: jax.Array, k: jax.Array, v: jax.Array, *,
                        causal: bool = True, window: int = 0,
                        block_q: int = 128, block_k: int = 128,
                        interpret: bool = True) -> jax.Array:
-    """q: (BH, S, D), k/v: (BH, T, D) -> (BH, S, D). MHA layout."""
+    """q: (BH, S, D), k/v: (BH, T, D) -> (BH, S, D). MHA-layout adapter.
+
+    Non-block-multiple S/T are padded to the block multiple (padded kv slots
+    carry position -1 and are masked) and the output sliced back.
+    """
     BH, S, D = q.shape
-    _, T, _ = k.shape
+    T = k.shape[1]
     bq = min(block_q, S)
     bk = min(block_k, T)
-    assert S % bq == 0 and T % bk == 0, (S, bq, T, bk)
-    nq, nk = S // bq, T // bk
-    scale = 1.0 / math.sqrt(D)
-
-    kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, window=window,
-        block_q=bq, block_k=bk, n_kv_blocks=nk)
-
-    return pl.pallas_call(
-        kernel,
-        grid=(BH, nq, nk),
-        in_specs=[
-            pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, bk, D), lambda b, i, j: (b, j, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, D), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((BH, S, D), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq,), jnp.float32),
-            pltpu.VMEM((bq, D), jnp.float32),
-        ],
-        interpret=interpret,
-    )(q, k, v)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    q_pos = jnp.where(jnp.arange(Sp) < S, jnp.arange(Sp), -1).astype(jnp.int32)
+    kv_pos = jnp.where(jnp.arange(Tp) < T, jnp.arange(Tp), -1).astype(jnp.int32)
+    out, _ = flash_attention_fwd(
+        pad_axis(q, 1, Sp)[:, None, None], pad_axis(k, 1, Tp)[:, None],
+        pad_axis(v, 1, Tp)[:, None],
+        jnp.tile(q_pos[None], (BH, 1)), jnp.tile(kv_pos[None], (BH, 1)),
+        causal=causal, window=window, block_q=bq, block_k=bk,
+        interpret=interpret)
+    return out[:, 0, 0, :S]

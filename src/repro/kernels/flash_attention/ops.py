@@ -1,34 +1,107 @@
-"""jit'd public wrapper: GQA-aware flash attention."""
+"""Public wrappers for the flash-attention Pallas kernels.
+
+Model-layout in, model-layout out: q ``(B, S, Hq, D)``, k/v ``(B, T, Hkv, D)``
+with ``Hq % Hkv == 0`` (query head ``h`` belongs to kv head ``h // G``). The
+wrappers handle the GQA layout transform (no ``jnp.repeat`` of k/v — kv tiles
+are shared across the G query heads inside the kernel), default positions,
+and pad-to-block-multiple + slice for odd sequence lengths.
+"""
 from __future__ import annotations
 
 from functools import partial
+from typing import Optional, Tuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.common import use_interpret
-from repro.kernels.flash_attention.kernel import flash_attention_bh
+from repro.kernels.common import pad_axis, pad_positions, use_interpret
+from repro.kernels.flash_attention.kernel import (flash_attention_bh,
+                                                 flash_attention_fwd,
+                                                 flash_decode_fwd)
+
+__all__ = ["flash_attention", "flash_attention_gqa_fwd", "flash_decode",
+           "flash_attention_bh"]
 
 
-@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
-                                   "interpret"))
-def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
-                    causal: bool = True, window: int = 0, block_q: int = 128,
-                    block_k: int = 128,
-                    interpret: bool | None = None) -> jax.Array:
-    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D) with Hq % Hkv == 0."""
+def _default_positions(B: int, n: int) -> jax.Array:
+    return jnp.broadcast_to(jnp.arange(n, dtype=jnp.int32), (B, n))
+
+
+def flash_attention_gqa_fwd(
+    q: jax.Array, k: jax.Array, v: jax.Array, *,
+    causal: bool = True, window: int = 0, softcap: float = 0.0,
+    q_positions: Optional[jax.Array] = None,
+    kv_positions: Optional[jax.Array] = None,
+    block_q: int = 128, block_k: int = 128,
+    interpret: Optional[bool] = None,
+) -> Tuple[jax.Array, jax.Array]:
+    """Pallas forward, any S/T. q: (B, S, Hq, D), k/v: (B, T, Hkv, D).
+
+    Returns (out (B, S, Hq, D), lse (B, Hkv, G, S) f32) — lse is what a
+    recompute-based backward needs instead of saved score tiles.
+    """
     if interpret is None:
         interpret = use_interpret()
     B, S, Hq, D = q.shape
     _, T, Hkv, _ = k.shape
     G = Hq // Hkv
-    if G > 1:
-        k = jnp.repeat(k, G, axis=2)
-        v = jnp.repeat(v, G, axis=2)
-    qb = q.transpose(0, 2, 1, 3).reshape(B * Hq, S, D)
-    kb = k.transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
-    vb = v.transpose(0, 2, 1, 3).reshape(B * Hq, T, D)
-    ob = flash_attention_bh(qb, kb, vb, causal=causal, window=window,
-                            block_q=block_q, block_k=block_k,
-                            interpret=interpret)
-    return ob.reshape(B, Hq, S, D).transpose(0, 2, 1, 3)
+    bq = min(block_q, S)
+    bk = min(block_k, T)
+    Sp = -(-S // bq) * bq
+    Tp = -(-T // bk) * bk
+    q_pos = _default_positions(B, S) if q_positions is None else q_positions
+    kv_pos = _default_positions(B, T) if kv_positions is None else kv_positions
+    q5 = pad_axis(q, 1, Sp).reshape(B, Sp, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    k4 = pad_axis(k, 1, Tp).transpose(0, 2, 1, 3)
+    v4 = pad_axis(v, 1, Tp).transpose(0, 2, 1, 3)
+    out5, lse = flash_attention_fwd(
+        q5, k4, v4, pad_positions(q_pos.astype(jnp.int32), Sp),
+        pad_positions(kv_pos.astype(jnp.int32), Tp),
+        causal=causal, window=window, softcap=softcap,
+        block_q=bq, block_k=bk, interpret=interpret)
+    out = out5.transpose(0, 3, 1, 2, 4).reshape(B, Sp, Hq, D)
+    return out[:, :S], lse[..., :S]
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "softcap", "block_q",
+                                   "block_k", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    softcap: float = 0.0, block_q: int = 128,
+                    block_k: int = 128,
+                    interpret: Optional[bool] = None) -> jax.Array:
+    """q: (B, S, Hq, D); k/v: (B, T, Hkv, D) with Hq % Hkv == 0."""
+    out, _ = flash_attention_gqa_fwd(
+        q, k, v, causal=causal, window=window, softcap=softcap,
+        block_q=block_q, block_k=block_k, interpret=interpret)
+    return out
+
+
+def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
+                 q_positions: jax.Array, kv_positions: jax.Array, *,
+                 causal: bool = True, window: int = 0, softcap: float = 0.0,
+                 block_k: int = 128,
+                 interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-step attention against a (ring) KV cache.
+
+    q: (B, S, Hq, D) with small S (the fused-decode chunk step; typically 1),
+    k/v: (B, T, Hkv, D) cache, q_positions: (B, S) per-sequence absolute
+    positions, kv_positions: (B, T) per-slot positions (-1 = empty slot —
+    ring layout and valid-length masking are both expressed here).
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k.shape
+    G = Hq // Hkv
+    bk = min(block_k, T)
+    Tp = -(-T // bk) * bk
+    q5 = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    out5 = flash_decode_fwd(
+        q5, pad_axis(k, 1, Tp).transpose(0, 2, 1, 3),
+        pad_axis(v, 1, Tp).transpose(0, 2, 1, 3),
+        q_positions.astype(jnp.int32),
+        pad_positions(kv_positions.astype(jnp.int32), Tp),
+        causal=causal, window=window, softcap=softcap, block_k=bk,
+        interpret=interpret)
+    return out5.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)

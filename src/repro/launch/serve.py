@@ -15,6 +15,7 @@ sized to prompt_len + gen at prefill; no repad between phases):
 from __future__ import annotations
 
 import argparse
+import os
 import time
 from typing import Any, Dict, List, Optional
 
@@ -179,8 +180,14 @@ def main() -> None:
     ap.add_argument("--requests", type=int, default=10)
     ap.add_argument("--temperature", type=float, default=0.0)
     ap.add_argument("--top-k", type=int, default=0)
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "pallas", "jnp"],
+                    help="attention backend for every model family "
+                    "(sets REPRO_ATTN_IMPL before programs are traced)")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
+    if args.attn_impl:
+        os.environ["REPRO_ATTN_IMPL"] = args.attn_impl
     if args.mode == "queue":
         eng = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
                           requests=args.requests, prompt_len=args.prompt_len,

@@ -116,7 +116,13 @@ def main() -> None:
     ap.add_argument("--checkpoint-dir", default="")
     ap.add_argument("--resume", action="store_true")
     ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--attn-impl", default=None,
+                    choices=["auto", "pallas", "jnp"],
+                    help="attention backend (sets REPRO_ATTN_IMPL before "
+                    "the train step is traced)")
     args = ap.parse_args()
+    if args.attn_impl:
+        os.environ["REPRO_ATTN_IMPL"] = args.attn_impl
     run = RunConfig(total_steps=args.steps, learning_rate=args.lr,
                     microbatches=1)
     out = train(args.arch, smoke=args.smoke, steps=args.steps,

@@ -1,13 +1,23 @@
-"""Shared layers: RMSNorm, RoPE, gated MLP, chunked online-softmax attention.
+"""Shared layers: RMSNorm, RoPE, gated MLP, and the attention dispatch layer.
 
-Attention is implemented *chunked* (flash-attention structure in pure jnp):
-the working set per step is one (q-chunk x kv-chunk) tile — the HBM->VMEM
-data-movement-minimization analogue of processing-using-memory, and the
-reference oracle for ``repro.kernels.flash_attention``.
+``chunked_attention`` is the single attention entry point for every model
+family and the serving engine. It dispatches between two backends
+(``REPRO_ATTN_IMPL=pallas|jnp|auto``; auto = compiled Pallas on TPU, jnp
+elsewhere):
+
+* **pallas** — the ``repro.kernels.flash_attention`` TPU kernels: GQA-native
+  prefill/train forward with a recompute-based custom VJP, and a
+  decode-specialized kernel streaming the ring KV cache.
+* **jnp** — the chunked online-softmax implementation below (same flash
+  structure in pure jnp); the oracle the Pallas path is tested against.
+
+Both keep the working set per step at one (q-chunk x kv-chunk) tile — the
+HBM->VMEM data-movement-minimization analogue of processing-using-memory.
 """
 from __future__ import annotations
 
 import math
+import warnings
 from functools import partial
 from typing import Any, Optional, Tuple
 
@@ -15,6 +25,15 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mimdram import constrain
+from repro.kernels.common import attn_impl, pad_axis, pad_positions
+from repro.kernels.flash_attention.ops import (flash_attention_gqa_fwd,
+                                               flash_decode)
+
+# Pallas decode kernel: the whole (G, S) query block stays VMEM-resident
+# across the kv stream, so the positional path only routes to it while the
+# q-block row count is small; beyond this, forced-pallas calls fall back to
+# the jnp path (with a trace-time warning).
+PALLAS_DECODE_MAX_Q_ROWS = 1024
 
 NEG_INF = -1e30
 
@@ -154,24 +173,82 @@ def chunked_attention(
     chunk_kv: int = 1024,
     attn_softcap: float = 0.0,
     block_skip: bool = False,     # beyond-paper: skip fully-masked kv tiles
+    impl: Optional[str] = None,   # 'pallas' | 'jnp' | None = REPRO_ATTN_IMPL
 ) -> jax.Array:
-    """Tiled attention with online softmax; O(Cq*Ck) live scores memory."""
+    """Tiled attention with online softmax; O(Cq*Ck) live scores memory.
+
+    Backend dispatch: see the module docstring. Non-block-multiple S/T are
+    padded to the chunk multiple (padded kv carries -1 positions / a static
+    valid length, so it is masked) and the output sliced back — odd prompt
+    lengths are legal on every path.
+    """
     B, S, Hq, D = q.shape
     _, T, Hkv, _ = k.shape
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(D)
     cq = min(chunk_q, S)
     ck = min(chunk_kv, T)
-    assert S % cq == 0 and T % ck == 0, (S, cq, T, ck)
-    nq, nk = S // cq, T // ck
+    backend = attn_impl() if impl is None else impl
 
     # training/prefill path: flash custom-VJP (O(S) activation memory)
     if (kv_positions is None and kv_valid_len is None and S > 1
             and isinstance(q_offset, int) and q_offset == 0):
-        qg = q.reshape(B, S, Hkv, G, D)
-        out = flash_attention_jnp(qg, k, v, causal, window, attn_softcap,
-                                  cq, ck, block_skip)
-        return out.reshape(B, S, Hq, D)
+        Sp = -(-S // cq) * cq
+        Tp = -(-T // ck) * ck
+        qp = pad_axis(q, 1, Sp)
+        kp = pad_axis(k, 1, Tp)
+        vp = pad_axis(v, 1, Tp)
+        kv_len = 0 if Tp == T else T
+        qg = qp.reshape(B, Sp, Hkv, G, D)
+        if backend == "pallas":
+            out = flash_attention_pallas(qg, kp, vp, causal, window,
+                                         attn_softcap, cq, ck, kv_len, None)
+        else:
+            out = flash_attention_jnp(qg, kp, vp, causal, window, attn_softcap,
+                                      cq, ck, block_skip, kv_len)
+        out = out.reshape(B, Sp, Hq, D)
+        return out[:, :S] if Sp != S else out
+
+    # decode path (small q against a possibly-ring KV cache): the Pallas
+    # decode kernel takes per-sequence q positions + per-slot kv positions
+    # (-1 = empty slot; kv_valid_len folds into the same sentinel).
+    if backend == "pallas":
+        if S * G <= PALLAS_DECODE_MAX_Q_ROWS:
+            q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+            q_pos = q_off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+            if kv_positions is None:
+                kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
+                                          (B, T))
+            else:
+                kv_pos = jnp.broadcast_to(kv_positions.astype(jnp.int32),
+                                          (B, T))
+            if kv_valid_len is not None:
+                valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32),
+                                         (B,))
+                kv_pos = jnp.where(kv_pos < valid[:, None], kv_pos, -1)
+            return flash_decode(q, k, v, q_pos, kv_pos, causal=causal,
+                                window=window, softcap=attn_softcap,
+                                block_k=ck)
+        warnings.warn(
+            f"chunked_attention: positional call with {S * G} q-block rows "
+            f"exceeds PALLAS_DECODE_MAX_Q_ROWS={PALLAS_DECODE_MAX_Q_ROWS}; "
+            "falling back to the jnp path", stacklevel=2)
+
+    # generic jnp fallback (batched positions, any q length)
+    S0 = S
+    Sp = -(-S // cq) * cq
+    Tp = -(-T // ck) * ck
+    if Tp != T:
+        if kv_positions is None:
+            kv_positions = jnp.arange(T, dtype=jnp.int32)
+        kv_positions = pad_positions(kv_positions, Tp)
+        k = pad_axis(k, 1, Tp)
+        v = pad_axis(v, 1, Tp)
+        T = Tp
+    if Sp != S:
+        q = pad_axis(q, 1, Sp)
+        S = Sp
+    nq, nk = S // cq, T // ck
 
     qg = q.reshape(B, nq, cq, Hkv, G, D)
     kg = k.reshape(B, nk, ck, Hkv, D)
@@ -256,11 +333,11 @@ def chunked_attention(
         return out.astype(q.dtype)  # (B, cq, Hkv, G, D)
 
     if nq == 1:
-        out = q_chunk(0)
-        return out.reshape(B, S, Hq, D)
-    outs = jax.lax.map(q_chunk, jnp.arange(nq, dtype=jnp.int32))  # (nq,B,cq,...)
-    out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, D)
-    return out
+        out = q_chunk(0).reshape(B, S, Hq, D)
+    else:
+        outs = jax.lax.map(q_chunk, jnp.arange(nq, dtype=jnp.int32))
+        out = jnp.moveaxis(outs, 0, 1).reshape(B, S, Hq, D)  # (nq,B,cq,...)
+    return out[:, :S0] if S != S0 else out
 
 
 # ---------------------------------------------------------------------------
@@ -282,8 +359,9 @@ def _kv_range(i, cq, ck, T, causal, window, block_skip):
 
 
 def _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
-                    block_skip=False):
+                    block_skip=False, kv_len=0):
     """Returns (out, lse). q:(B,S,Hkv,G,D) k/v:(B,T,Hkv,D).
+    kv_len > 0 masks kv positions >= kv_len (pad-to-block-multiple support).
 
     block_skip=True (beyond-paper): q-chunks are Python-unrolled so each
     scans only its statically-reachable kv chunks — causal attention does
@@ -303,7 +381,7 @@ def _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
 
         def kv_step(carry, j):
             m, l, acc = carry
-            mask = _flash_mask(q_pos, j, ck, causal, window)
+            mask = _flash_mask(q_pos, j, ck, causal, window, kv_len)
             m, l, acc = _attn_tile(qc, kg[:, j], vg[:, j], mask, m, l, acc,
                                    scale, attn_softcap)
             return (m, l, acc), None
@@ -338,13 +416,15 @@ def _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
     return out, lse
 
 
-def _flash_mask(q_pos, j, ck, causal, window):
+def _flash_mask(q_pos, j, ck, causal, window, kv_len=0):
     k_pos = j * ck + jnp.arange(ck, dtype=jnp.int32)
     mask = jnp.ones((q_pos.shape[0], ck), bool)
     if causal:
         mask &= k_pos[None, :] <= q_pos[:, None]
     if window > 0:
         mask &= k_pos[None, :] > q_pos[:, None] - window
+    if kv_len > 0:
+        mask &= (k_pos < kv_len)[None, :]
     return mask
 
 
@@ -356,21 +436,23 @@ def _flash_tile_scores(qc, kc, scale, cap):
     return s_raw, s_raw
 
 
-@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8))
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
 def flash_attention_jnp(q, k, v, causal=True, window=0, attn_softcap=0.0,
-                        cq=512, ck=1024, block_skip=False):
+                        cq=512, ck=1024, block_skip=False, kv_len=0):
     out, _ = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
-                             block_skip)
+                             block_skip, kv_len)
     return out
 
 
-def _flash_vjp_fwd(q, k, v, causal, window, attn_softcap, cq, ck, block_skip):
+def _flash_vjp_fwd(q, k, v, causal, window, attn_softcap, cq, ck, block_skip,
+                   kv_len):
     out, lse = _flash_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
-                               block_skip)
+                               block_skip, kv_len)
     return out, (q, k, v, out, lse)
 
 
-def _flash_vjp_bwd(causal, window, attn_softcap, cq, ck, block_skip, res, do):
+def _flash_vjp_bwd(causal, window, attn_softcap, cq, ck, block_skip, kv_len,
+                   res, do):
     q, k, v, out, lse = res
     B, S, Hkv, G, D = q.shape
     T = k.shape[1]
@@ -395,7 +477,7 @@ def _flash_vjp_bwd(causal, window, attn_softcap, cq, ck, block_skip, res, do):
         def kv_step(carry2, j):
             dq_c, dk_a, dv_a = carry2
             kc, vc = kg[:, j], vg[:, j]
-            mask = _flash_mask(q_pos, j, ck, causal, window)
+            mask = _flash_mask(q_pos, j, ck, causal, window, kv_len)
             s, s_raw = _flash_tile_scores(qc, kc, scale, attn_softcap)
             s = jnp.where(mask[None, None, None], s, NEG_INF)
             p = jnp.exp(s - lse_i[..., None])                  # (B,K,G,q,s)
@@ -452,6 +534,55 @@ def _flash_vjp_bwd(causal, window, attn_softcap, cq, ck, block_skip, res, do):
 
 
 flash_attention_jnp.defvjp(_flash_vjp_fwd, _flash_vjp_bwd)
+
+
+# ---------------------------------------------------------------------------
+# Pallas-backed flash attention (train/prefill): Pallas forward kernel,
+# recompute-based jnp backward from (out, lse) — same residual contract as
+# flash_attention_jnp, so training runs on the TPU kernel with O(S)
+# activation memory and no saved score tiles.
+# ---------------------------------------------------------------------------
+def _flash_pallas_fwd_impl(q, k, v, causal, window, attn_softcap, cq, ck,
+                           kv_len, interpret):
+    """q:(B,S,Hkv,G,D) k/v:(B,T,Hkv,D); S % cq == 0, T % ck == 0 (caller
+    pads); kv_len > 0 masks kv positions >= kv_len. Returns (out, lse) with
+    lse (B,K,G,nq,cq) — the flash_attention_jnp residual layout."""
+    B, S, Hkv, G, D = q.shape
+    T = k.shape[1]
+    kv_pos = None
+    if kv_len:
+        ar = jnp.arange(T, dtype=jnp.int32)
+        kv_pos = jnp.broadcast_to(jnp.where(ar < kv_len, ar, -1), (B, T))
+    out, lse = flash_attention_gqa_fwd(
+        q.reshape(B, S, Hkv * G, D), k, v, causal=causal, window=window,
+        softcap=attn_softcap, kv_positions=kv_pos, block_q=cq, block_k=ck,
+        interpret=interpret)
+    return (out.reshape(B, S, Hkv, G, D),
+            lse.reshape(B, Hkv, G, S // cq, cq))
+
+
+@partial(jax.custom_vjp, nondiff_argnums=(3, 4, 5, 6, 7, 8, 9))
+def flash_attention_pallas(q, k, v, causal=True, window=0, attn_softcap=0.0,
+                           cq=512, ck=1024, kv_len=0, interpret=None):
+    out, _ = _flash_pallas_fwd_impl(q, k, v, causal, window, attn_softcap,
+                                    cq, ck, kv_len, interpret)
+    return out
+
+
+def _flash_pallas_vjp_fwd(q, k, v, causal, window, attn_softcap, cq, ck,
+                          kv_len, interpret):
+    out, lse = _flash_pallas_fwd_impl(q, k, v, causal, window, attn_softcap,
+                                      cq, ck, kv_len, interpret)
+    return out, (q, k, v, out, lse)
+
+
+def _flash_pallas_vjp_bwd(causal, window, attn_softcap, cq, ck, kv_len,
+                          interpret, res, do):
+    return _flash_vjp_bwd(causal, window, attn_softcap, cq, ck, False, kv_len,
+                          res, do)
+
+
+flash_attention_pallas.defvjp(_flash_pallas_vjp_fwd, _flash_pallas_vjp_bwd)
 
 
 def attention_ref(q, k, v, *, causal=True, window=0, q_offset=0,

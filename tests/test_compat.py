@@ -231,3 +231,21 @@ def test_no_version_fragile_imports_outside_compat():
     assert not offenders, (
         "version-fragile JAX spellings outside repro.compat "
         "(import them from repro.compat instead):\n" + "\n".join(offenders))
+
+
+def test_pallas_call_sites_import_via_compat():
+    checker = _load_checker()
+    offenders = checker.find_pallas_offenders(REPO)
+    assert not offenders, (
+        "pallas call sites must obtain entry points from repro.compat:\n"
+        + "\n".join(offenders))
+
+
+def test_pallas_vmem_scratch_resolves():
+    # the helper must hand out a usable scratch allocation on every install,
+    # including ones where import_pallas_tpu() returns None
+    scr = compat.pallas_vmem_scratch((8, 128), jnp.float32)
+    assert scr is not None
+    if compat.import_pallas_tpu() is None:
+        pl = compat.import_pallas()
+        assert isinstance(scr, pl.MemoryRef)

@@ -1,0 +1,215 @@
+"""Pallas flash attention (interpret) vs the jnp oracle: full parity grid.
+
+Covers the production cells the dispatch layer routes to the kernels —
+causal x window x GQA groups x softcap x decode-mask (ring cache, per-slot
+positions, valid length) x odd lengths — forward and gradient, plus the
+``REPRO_ATTN_IMPL`` dispatch itself end to end through a model decode step.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.common import attn_impl
+from repro.kernels.flash_attention import flash_attention, flash_attention_bh
+from repro.models.layers import (attention_ref, chunked_attention,
+                                 flash_attention_jnp, flash_attention_pallas,
+                                 ring_cache_store, ring_position_ids)
+
+
+def _qkv(rng, B, S, T, Hq, Hkv, D, dtype=jnp.float32):
+    ks = jax.random.split(rng, 3)
+    return (jax.random.normal(ks[0], (B, S, Hq, D)).astype(dtype),
+            jax.random.normal(ks[1], (B, T, Hkv, D)).astype(dtype),
+            jax.random.normal(ks[2], (B, T, Hkv, D)).astype(dtype))
+
+
+# ---------------------------------------------------------------------------
+# Forward parity grid: Pallas (interpret) vs the quadratic oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("G", [1, 2, 4])
+@pytest.mark.parametrize("causal,window,cap", [
+    (True, 0, 0.0), (True, 48, 0.0), (True, 0, 20.0), (False, 0, 0.0),
+    (True, 48, 20.0),
+])
+def test_flash_forward_grid(G, causal, window, cap, rng):
+    B, S, Hkv, D = 2, 128, 2, 32
+    q, k, v = _qkv(rng, B, S, S, G * Hkv, Hkv, D)
+    out = flash_attention(q, k, v, causal=causal, window=window, softcap=cap,
+                          block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, causal=causal, window=window,
+                        attn_softcap=cap)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+@pytest.mark.parametrize("S,T", [(100, 100), (130, 70), (1, 96)])
+def test_flash_forward_odd_lengths(S, T, rng):
+    """Non-block-multiple S/T: pad + slice, padded kv masked."""
+    q, k, v = _qkv(rng, 1, S, T, 4, 2, 32)
+    out = flash_attention(q, k, v, causal=False, block_q=64, block_k=64,
+                          interpret=True)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_bh_odd_length_no_crash(rng):
+    """flash_attention_bh: odd S/T pad+slice (was a hard assert) and the
+    compat scratch helper (was a None deref without TPU pallas)."""
+    ks = jax.random.split(rng, 3)
+    q = jax.random.normal(ks[0], (2, 100, 32))
+    k = jax.random.normal(ks[1], (2, 100, 32))
+    v = jax.random.normal(ks[2], (2, 100, 32))
+    out = flash_attention_bh(q, k, v, causal=True, block_q=64, block_k=64,
+                             interpret=True)
+    ref = attention_ref(q[:, :, None], k[:, :, None], v[:, :, None],
+                        causal=True)[:, :, 0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5)
+
+
+def test_flash_bf16(rng):
+    q, k, v = _qkv(rng, 1, 128, 128, 4, 2, 64, jnp.bfloat16)
+    out = flash_attention(q, k, v, causal=True, interpret=True)
+    ref = attention_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), atol=2e-2)
+
+
+# ---------------------------------------------------------------------------
+# Gradients: Pallas fwd + recompute bwd vs the jnp flash path and the oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("win,cap,G", [(0, 0.0, 2), (48, 0.0, 1),
+                                       (0, 20.0, 4)])
+def test_flash_pallas_grads(win, cap, G, rng):
+    B, S, Hkv, D = 2, 128, 2, 32
+    q, k, v = _qkv(rng, B, S, S, G * Hkv, Hkv, D)
+    do = jax.random.normal(jax.random.split(rng, 4)[3], q.shape)
+    qg = q.reshape(B, S, Hkv, G, D)
+
+    def f_pallas(qg, k, v):
+        return (flash_attention_pallas(qg, k, v, True, win, cap, 64, 64, 0,
+                                       True).reshape(q.shape) * do).sum()
+
+    def f_jnp(qg, k, v):
+        return (flash_attention_jnp(qg, k, v, True, win, cap, 64, 64, False,
+                                    0).reshape(q.shape) * do).sum()
+
+    gp = jax.grad(f_pallas, argnums=(0, 1, 2))(qg, k, v)
+    gj = jax.grad(f_jnp, argnums=(0, 1, 2))(qg, k, v)
+    for a, b in zip(gp, gj):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+def test_flash_pallas_grads_odd_length_via_dispatch(rng):
+    """Odd S through chunked_attention(impl=pallas): padded-row grads zero."""
+    B, S, Hq, Hkv, D = 1, 100, 4, 2, 32
+    q, k, v = _qkv(rng, B, S, S, Hq, Hkv, D)
+    do = jax.random.normal(jax.random.split(rng, 4)[3], q.shape)
+
+    def make(impl):
+        def f(q, k, v):
+            o = chunked_attention(q, k, v, causal=True, chunk_q=64,
+                                  chunk_kv=64, impl=impl)
+            return (o * do).sum()
+        return jax.grad(f, argnums=(0, 1, 2))(q, k, v)
+
+    def f_ref(q, k, v):
+        return (attention_ref(q, k, v, causal=True) * do).sum()
+
+    gp = make("pallas")
+    gr = jax.grad(f_ref, argnums=(0, 1, 2))(q, k, v)
+    for a, b in zip(gp, gr):
+        np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-4)
+
+
+# ---------------------------------------------------------------------------
+# Decode cells: ring cache, per-sequence positions, valid length, window
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("window,valid", [(0, False), (40, False), (0, True),
+                                          (40, True)])
+def test_flash_decode_ring_cache(window, valid, rng):
+    """The serving engine's masks: ring kv layout (-1 empty slots), per-seq
+    q positions, optional kv_valid_len — Pallas decode kernel vs jnp path."""
+    B, Hq, Hkv, D, cache_len, total = 2, 4, 2, 32, 64, 80
+    q, k, v = _qkv(rng, B, 1, total, Hq, Hkv, D)
+    kc = ring_cache_store(k, total, cache_len)
+    vc = ring_cache_store(v, total, cache_len)
+    pos_ids = ring_position_ids(B, total, cache_len)
+    pos = jnp.full((B,), total, jnp.int32)
+    kw = dict(causal=True, window=window, q_offset=pos, kv_positions=pos_ids,
+              chunk_kv=48)                 # 48 also exercises T % ck != 0
+    if valid:
+        kw["kv_valid_len"] = pos + 1
+    oj = chunked_attention(q, kc, vc, impl="jnp", **kw)
+    op = chunked_attention(q, kc, vc, impl="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(oj), atol=2e-5)
+
+
+def test_flash_decode_cross_attention(rng):
+    """Enc-dec cross-attention decode: S=1, non-causal, odd source length."""
+    q, k, v = _qkv(rng, 2, 1, 48, 4, 2, 32)
+    oj = chunked_attention(q, k, v, causal=False, chunk_kv=32, impl="jnp")
+    op = chunked_attention(q, k, v, causal=False, chunk_kv=32, impl="pallas")
+    np.testing.assert_allclose(np.asarray(op), np.asarray(oj), atol=2e-5)
+
+
+def test_flash_decode_mixed_depth_slots(rng):
+    """Continuous batching: every slot at a different depth in one cache."""
+    B, Hq, Hkv, D, T = 3, 4, 1, 32, 64
+    q, k, v = _qkv(rng, B, 1, T, Hq, Hkv, D)
+    pos = jnp.asarray([5, 33, 61], jnp.int32)
+    pos_ids = jnp.where(jnp.arange(T)[None, :] <= pos[:, None],
+                        jnp.arange(T, dtype=jnp.int32)[None, :], -1)
+    kw = dict(causal=True, q_offset=pos, kv_positions=pos_ids, chunk_kv=32)
+    oj = chunked_attention(q, k, v, impl="jnp", **kw)
+    op = chunked_attention(q, k, v, impl="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(oj), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Dispatch layer: REPRO_ATTN_IMPL routes every family's attention
+# ---------------------------------------------------------------------------
+def test_attn_impl_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "pallas")
+    assert attn_impl() == "pallas"
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "jnp")
+    assert attn_impl() == "jnp"
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "auto")
+    expect = "pallas" if jax.default_backend() == "tpu" else "jnp"
+    assert attn_impl() == expect
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "nope")
+    with pytest.raises(ValueError):
+        attn_impl()
+
+
+def test_dispatch_env_end_to_end_decode_step(monkeypatch, rng):
+    """A TransformerLM prefill + decode step is bit-compatible between the
+    jnp and Pallas backends, selected purely via REPRO_ATTN_IMPL — the
+    serving engine's hot path with zero call-site changes."""
+    from repro.configs.base import ModelConfig
+    from repro.models import init_params
+    from repro.models.model import TransformerLM
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      param_dtype="float32", compute_dtype="float32")
+    model = TransformerLM(cfg)
+    params = init_params(model.param_specs(), rng)
+    tokens = jax.random.randint(jax.random.split(rng)[0], (2, 9), 0, 64)
+    outs = {}
+    for impl in ("jnp", "pallas"):
+        monkeypatch.setenv("REPRO_ATTN_IMPL", impl)
+        logits, cache = model.prefill(params, {"tokens": tokens}, max_len=16)
+        step, cache = model.decode_step(
+            params, cache, jnp.argmax(logits, -1).astype(jnp.int32))
+        outs[impl] = (np.asarray(logits), np.asarray(step))
+    np.testing.assert_allclose(outs["pallas"][0], outs["jnp"][0], atol=2e-4)
+    np.testing.assert_allclose(outs["pallas"][1], outs["jnp"][1], atol=2e-4)
+
+
+def test_dispatch_impl_arg_overrides_env(monkeypatch, rng):
+    monkeypatch.setenv("REPRO_ATTN_IMPL", "jnp")
+    q, k, v = _qkv(rng, 1, 64, 64, 2, 2, 16)
+    a = chunked_attention(q, k, v, causal=True, chunk_q=32, chunk_kv=32,
+                          impl="pallas")
+    b = chunked_attention(q, k, v, causal=True, chunk_q=32, chunk_kv=32)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=2e-5)

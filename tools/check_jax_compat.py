@@ -62,16 +62,47 @@ def find_offenders(repo: str) -> List[str]:
     return offenders
 
 
+# Any Pallas call site (pallas_call / pl.* entry points / pltpu.* scratch)
+# must obtain its pallas modules from repro.compat — the entry-point location
+# is version-sensitive and the TPU namespace may be absent entirely.
+_PALLAS_USE = re.compile(
+    r"\bpallas_call\s*\(|\bpltpu\s*\.\s*\w+\s*\(|\bpl\s*\.\s*BlockSpec\s*\(")
+# Two-part check so parenthesized multi-line imports pass: the file must
+# import *something* from repro.compat AND name a pallas accessor somewhere.
+_COMPAT_IMPORT = re.compile(r"from\s+repro\.compat[\w.]*\s+import\b")
+_PALLAS_NAME = re.compile(
+    r"\b(import_pallas|import_pallas_tpu|pallas_call|pallas_vmem_scratch)\b")
+
+
+def find_pallas_offenders(repo: str) -> List[str]:
+    """Files using Pallas entry points without importing them via compat."""
+    offenders = []
+    for path in _py_files(repo):
+        rel = os.path.relpath(path, repo)
+        if any(rel.startswith(e) for e in EXEMPT):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            text = fh.read()
+        uses = [(lineno, line) for lineno, line in
+                enumerate(text.splitlines(), 1) if _PALLAS_USE.search(line)]
+        if uses and not (_COMPAT_IMPORT.search(text)
+                         and _PALLAS_NAME.search(text)):
+            lineno, line = uses[0]
+            offenders.append(f"{rel}:{lineno}: {line.strip()} "
+                             "(pallas entry points must come from repro.compat)")
+    return offenders
+
+
 def main() -> int:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    offenders = find_offenders(repo)
+    offenders = find_offenders(repo) + find_pallas_offenders(repo)
     if offenders:
         print("version-fragile JAX spellings outside repro.compat "
               "(import them from repro.compat instead):", file=sys.stderr)
         for line in offenders:
             print(f"  {line}", file=sys.stderr)
         return 1
-    print(f"compat lint clean ({len(FORBIDDEN)} patterns)")
+    print(f"compat lint clean ({len(FORBIDDEN)} patterns + pallas-site rule)")
     return 0
 
 
