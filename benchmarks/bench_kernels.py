@@ -27,7 +27,7 @@ TOL = 2e-5                      # fp32 interpret-mode parity gate
 # ---------------------------------------------------------------------------
 # Analytic roofline: Pallas tiling vs jnp chunked path, per production cell
 # ---------------------------------------------------------------------------
-def _attn_roofline(B, S, T, Hq, Hkv, D, ck, dtype_bytes=2):
+def _attn_roofline(B, S, T, Hq, Hkv, D, ck, dtype_bytes=2, kv_bits=16):
     """HBM-byte model, three lowerings of the same attention cell.
 
     * pallas: q/out once per q head, kv once per *kv* head (GQA tiles shared
@@ -42,16 +42,32 @@ def _attn_roofline(B, S, T, Hq, Hkv, D, ck, dtype_bytes=2):
       tensor. Dominant for decode on MQA/GQA caches, where the score tensor
       (per *q* head) rivals the kv stream (per *kv* head) — the decode cells'
       memory-traffic advantage lives here.
+
+    ``kv_bits < 16`` models the Proteus-quantized KV cache the **Pallas**
+    kernel dequantizes in VMEM: each (slot, head) row of D elements costs
+    ``D * kv_bits / 8`` code bytes plus one fp32 scale, so the dominant
+    decode stream shrinks ~2x (int8) / ~4x (int4). The chunked/naive
+    lowerings (the jnp paths) dequantize the cache up front, so they still
+    stream the full-width K/V through attention — the narrow codes only
+    reach HBM once per cache in their dequant pass, not per read.
     """
     flops = 4 * B * S * T * Hq * D                   # qk^T + pv
     q_io = B * S * Hq * D * dtype_bytes
     out_io = B * S * Hq * D * dtype_bytes
-    kv_io = 2 * B * T * Hkv * D * dtype_bytes
+    kv_row = (D * dtype_bytes if kv_bits == 16
+              else D * kv_bits // 8 + 4)             # codes + fp32 row scale
+    kv_io = 2 * B * T * Hkv * kv_row
+    kv_io_full = 2 * B * T * Hkv * D * dtype_bytes   # dequantized stream
     pallas = q_io + kv_io + out_io
+    # jnp paths with a quantized cache: read codes, write the dequantized
+    # full-width cache, then stream it through attention
+    dequant_io = 0 if kv_bits == 16 else kv_io + kv_io_full
     nk = -(-T // ck)
     carry = (B * S * Hq * D + 2 * B * S * Hq) * 4    # fp32 acc + (m, l)
-    chunked = pallas + 2 * carry * nk                # write + read per step
-    naive = pallas + 4 * B * Hq * S * T * 4          # s, p: write + read each
+    chunked = (q_io + kv_io_full + out_io + dequant_io
+               + 2 * carry * nk)                     # write + read per step
+    naive = (q_io + kv_io_full + out_io + dequant_io
+             + 4 * B * Hq * S * T * 4)               # s, p: write + read each
     ai = flops / pallas
     ridge = PEAK_FLOPS_BF16 / HBM_BW
     return {
@@ -80,12 +96,37 @@ CELLS = [
     # score-materializing lowering doubles HBM traffic vs the Pallas kernel
     ("decode_mqa", dict(decode=True, Hkv=1),
      dict(B=64, S=1, T=2048, Hq=32, Hkv=1, D=128, ck=1024)),
+    # Proteus-quantized KV cache (REPRO_KV_QUANT): the decode kernel reads
+    # int8 / packed-int4 codes + per-row scales and dequantizes in VMEM —
+    # kv bytes/token vs the bf16 cell is the kv_tok_x column
+    ("decode_q8", dict(decode=True, kv_quant="int8"),
+     dict(B=64, S=1, T=32768, Hq=32, Hkv=8, D=128, ck=1024, kv_bits=8)),
+    ("decode_q4", dict(decode=True, kv_quant="int4"),
+     dict(B=64, S=1, T=32768, Hq=32, Hkv=8, D=128, ck=1024, kv_bits=4)),
+    ("decode_mqa_q8", dict(decode=True, Hkv=1, kv_quant="int8"),
+     dict(B=64, S=1, T=2048, Hq=32, Hkv=1, D=128, ck=1024, kv_bits=8)),
+    ("decode_mqa_q4", dict(decode=True, Hkv=1, kv_quant="int4"),
+     dict(B=64, S=1, T=2048, Hq=32, Hkv=1, D=128, ck=1024, kv_bits=4)),
 ]
 
+# quantized-cell accuracy budget vs the bf16 oracle: the shared
+# KV_ERROR_BUDGET (models/layers.py; also the pytest gate + README table).
+# Imported lazily so this module stays importable without jax warm-up cost.
+def _kv_budget(mode: str) -> float:
+    from repro.models.layers import KV_ERROR_BUDGET
+    return KV_ERROR_BUDGET[mode]
 
-def _parity_err(spec) -> float:
+
+def _parity_err(spec):
+    """Returns (lowering parity err, extras dict). For quantized cells the
+    parity gate compares the in-kernel-dequant Pallas kernel against the jnp
+    dequant fallback (same dequantized operands -> tight), and ``extras``
+    carries the accuracy error vs the bf16 oracle plus the representation
+    the Proteus cost model picks for the sample cache."""
+    from repro.core.proteus import CostModel
     from repro.models.layers import (attention_ref, chunked_attention,
-                                     ring_cache_store, ring_position_ids)
+                                     kv_quantize, ring_cache_store,
+                                     ring_position_ids)
 
     B, D = 2, 32
     S = spec.get("S", 128)
@@ -96,6 +137,7 @@ def _parity_err(spec) -> float:
     q = jax.random.normal(ks[0], (B, S, Hq, D))
     k = jax.random.normal(ks[1], (B, T, Hkv, D))
     v = jax.random.normal(ks[2], (B, T, Hkv, D))
+    extras = {}
     if spec.get("decode"):
         cache_len, total = 64, 96       # ring cache wrapped past one lap
         kc = ring_cache_store(k[:, :total], total, cache_len)
@@ -104,8 +146,19 @@ def _parity_err(spec) -> float:
         pos = jnp.full((B,), total, jnp.int32)
         args = dict(causal=True, q_offset=pos, kv_positions=pos_ids,
                     chunk_kv=32)
+        mode = spec.get("kv_quant")
+        if mode:
+            bf16 = chunked_attention(q[:, :1], kc, vc, impl="jnp", **args)
+            kc, vc = kv_quantize(kc, mode), kv_quantize(vc, mode)
+            extras["rep"] = CostModel().select_for_tensor(
+                k[:, :total], block=D, err_budget=_kv_budget(mode)).name
         out = chunked_attention(q[:, :1], kc, vc, impl="pallas", **args)
         ref = chunked_attention(q[:, :1], kc, vc, impl="jnp", **args)
+        if mode:
+            extras["kv_err"] = float(np.abs(
+                np.asarray(ref, np.float32) - np.asarray(bf16, np.float32))
+                .max())
+            extras["kv_budget"] = _kv_budget(mode)
     else:
         args = dict(causal=spec.get("causal", True),
                     window=spec.get("window", 0),
@@ -115,8 +168,9 @@ def _parity_err(spec) -> float:
         ref = attention_ref(q, k, v, causal=args["causal"],
                             window=args["window"],
                             attn_softcap=args["attn_softcap"])
-    return float(np.abs(np.asarray(out, np.float32)
-                        - np.asarray(ref, np.float32)).max())
+    err = float(np.abs(np.asarray(out, np.float32)
+                       - np.asarray(ref, np.float32)).max())
+    return err, extras
 
 
 def run(emit) -> None:
@@ -124,20 +178,31 @@ def run(emit) -> None:
     failures = []
     for name, parity_spec, prod in CELLS:
         t0 = time.perf_counter()
-        err = _parity_err(parity_spec)
+        err, extras = _parity_err(parity_spec)
         us = (time.perf_counter() - t0) * 1e6
         ok = err <= TOL
         if not ok:
             failures.append((name, err))
         r = _attn_roofline(**prod)
-        emit(f"kernels/flash/{name}", us,
-             f"max_err={err:.2e};pass={ok};ai={r['ai']:.0f};"
-             f"proj_peak={100 * r['proj_peak']:.0f}%;"
-             f"bytes_pallas={r['bytes_pallas']};"
-             f"bytes_chunked={r['bytes_chunked']};"
-             f"bytes_naive={r['bytes_naive']};"
-             f"traffic_x={r['traffic_x']:.2f};"
-             f"naive_x={r['naive_x']:.2f}")
+        derived = (f"max_err={err:.2e};pass={ok};ai={r['ai']:.0f};"
+                   f"proj_peak={100 * r['proj_peak']:.0f}%;"
+                   f"bytes_pallas={r['bytes_pallas']};"
+                   f"bytes_chunked={r['bytes_chunked']};"
+                   f"bytes_naive={r['bytes_naive']};"
+                   f"traffic_x={r['traffic_x']:.2f};"
+                   f"naive_x={r['naive_x']:.2f}")
+        if prod.get("kv_bits"):
+            # kv bytes/token vs the bf16 cell of identical shape, and the
+            # accuracy-vs-bf16 gate within the documented error budget
+            bf16 = _attn_roofline(**dict(prod, kv_bits=16))
+            kv_tok_x = r["bytes_pallas"] / bf16["bytes_pallas"]
+            kv_ok = extras["kv_err"] <= extras["kv_budget"]
+            if not kv_ok:
+                failures.append((name, extras["kv_err"]))
+            derived += (f";kv_tok_x={kv_tok_x:.3f};"
+                        f"kv_err={extras['kv_err']:.2e};kv_pass={kv_ok};"
+                        f"rep={extras['rep']}")
+        emit(f"kernels/flash/{name}", us, derived)
     # quant matmul: weight-bytes reduction at the roofline
     for bits in (16, 8, 4):
         # decode GEMV regime: M=1 batch row, bandwidth-bound on weights

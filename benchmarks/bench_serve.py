@@ -17,6 +17,8 @@ Emits into the standard ``benchmarks/run.py`` CSV; ``benchmarks/report.py
 """
 from __future__ import annotations
 
+import os
+
 import numpy as np
 
 from repro.launch.serve import serve, serve_queue
@@ -55,6 +57,28 @@ def run(emit) -> None:
         if label == "decoder":
             # dispatch overhead dominates the tiny decoder: fused must win big
             assert speedup >= 3.0, f"{arch}: fused speedup only {speedup:.2f}x"
+
+    # Proteus-quantized KV cache on the decode hot path: tok/s with the
+    # int8 cache (in-kernel dequant on TPU; jnp dequant fallback on CPU,
+    # where tok/s is not expected to improve — the roofline rows in
+    # bench_kernels carry the bytes/token story) + a greedy-agreement gate
+    # between the fused and per-token engines under the same quantization.
+    os.environ["REPRO_KV_QUANT"] = "int8"
+    try:
+        kw = dict(smoke=True, batch=BATCH, prompt_len=PROMPT, gen=GEN,
+                  chunk=CHUNK)
+        loop_q = serve("pimref-100m", engine="loop", **kw)
+        fused_q = serve("pimref-100m", engine="fused", **kw)
+    finally:
+        os.environ.pop("REPRO_KV_QUANT", None)
+    match = bool(np.array_equal(loop_q["tokens"], fused_q["tokens"]))
+    emit(f"serve/decoder/fused_kvq8_chunk{CHUNK}",
+         fused_q["per_token_p50_s"] * 1e6,
+         f"tok_s={fused_q['throughput_tok_s']:.1f};"
+         f"disp_per_tok={fused_q['dispatches_per_token']:.3f};"
+         f"p95_us={fused_q['per_token_p95_s'] * 1e6:.0f};"
+         f"greedy_match={match}")
+    assert match, "kv-quant int8: fused tokens diverge from per-token loop"
 
     eng = serve_queue("pimref-100m", smoke=True, slots=4, requests=8,
                       prompt_len=PROMPT, gen=16, chunk=4)

@@ -170,7 +170,7 @@ def parse_kernels_csv(csv_path: str) -> Dict[str, Dict[str, object]]:
                 if "=" not in kv:
                     continue
                 k, v = kv.split("=", 1)
-                if k == "pass":
+                if k == "pass" or k.endswith("_pass"):
                     row[k] = v == "True"
                     continue
                 try:

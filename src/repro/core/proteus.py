@@ -29,6 +29,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.compat import axis_size, tree_map
+from repro.kernels.common import pack_int4, unpack_int4  # noqa: F401  (re-export)
 
 
 # ---------------------------------------------------------------------------
@@ -146,22 +147,9 @@ def dequantize(qt: QTensor) -> jax.Array:
     return flat.reshape(qt.shape).astype(qt.dtype)
 
 
-def pack_int4(v: jax.Array) -> jax.Array:
-    """Pack int8-held int4 codes (pairs) into one int8; exact roundtrip."""
-    assert v.shape[-1] % 2 == 0
-    lo = (v[..., 0::2] & 0x0F).astype(jnp.uint8)
-    hi = (v[..., 1::2] & 0x0F).astype(jnp.uint8)
-    return (lo | (hi << 4)).astype(jnp.int8)
-
-
-def unpack_int4(p: jax.Array) -> jax.Array:
-    pu = p.astype(jnp.uint8)
-    lo = (pu & 0x0F).astype(jnp.int8)
-    hi = ((pu >> 4) & 0x0F).astype(jnp.int8)
-    # sign-extend 4-bit
-    sx = lambda t: jnp.where(t >= 8, t - 16, t)
-    out = jnp.stack([sx(lo), sx(hi)], axis=-1)
-    return out.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
+# Canonical int4 nibble pack/unpack lives in repro.kernels.common (pure jnp,
+# compat-clean) and is re-exported from this module's import block above so
+# existing proteus callers keep working.
 
 
 # ---------------------------------------------------------------------------

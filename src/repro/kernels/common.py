@@ -1,5 +1,6 @@
-"""Shared kernel utilities: interpret-mode / attention-backend selection and
-pad-to-block-multiple helpers (one sentinel convention for every caller)."""
+"""Shared kernel utilities: interpret-mode / attention-backend / kv-quant
+selection, pad-to-block-multiple helpers (one sentinel convention for every
+caller), and the canonical int4 nibble pack/unpack pair."""
 from __future__ import annotations
 
 import os
@@ -8,6 +9,7 @@ import jax
 import jax.numpy as jnp
 
 ATTN_IMPLS = ("auto", "pallas", "jnp")
+KV_QUANT_MODES = ("off", "int8", "int4", "auto")
 
 
 def pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
@@ -33,6 +35,48 @@ def use_interpret() -> bool:
     if os.environ.get("REPRO_PALLAS_INTERPRET"):
         return os.environ["REPRO_PALLAS_INTERPRET"] != "0"
     return jax.default_backend() != "tpu"
+
+
+def kv_quant_mode() -> str:
+    """KV-cache representation for the serving hot path (Proteus runtime).
+
+    ``REPRO_KV_QUANT=off|int8|int4|auto``: ``off`` (default) keeps the bf16
+    cache; ``int8``/``int4`` store block-scaled codes + per-row fp32 scales
+    (int4 nibble-packed); ``auto`` keeps int8 storage but picks the
+    quantization grid per tensor data-aware (narrow-value detection). Read at
+    trace time, like ``REPRO_ATTN_IMPL``: set the knob before building jitted
+    programs (the launchers plumb ``--kv-quant`` here).
+    """
+    v = os.environ.get("REPRO_KV_QUANT", "off").lower()
+    if v not in KV_QUANT_MODES:
+        raise ValueError(
+            f"REPRO_KV_QUANT={v!r}: expected one of {KV_QUANT_MODES}")
+    return v
+
+
+# ---------------------------------------------------------------------------
+# int4 nibble packing — the one shared implementation (re-exported by
+# repro.core.proteus and repro.kernels.narrow_value.ref; the Pallas kernels
+# in kernels/narrow_value are the hardware lowering tested against these).
+# Pure jnp, so no new version-sensitive Pallas entry point is needed.
+# ---------------------------------------------------------------------------
+def pack_int4(v: jax.Array) -> jax.Array:
+    """Pack int8-held int4 codes (pairs along the last axis) into one int8
+    byte each; exact roundtrip with :func:`unpack_int4`."""
+    assert v.shape[-1] % 2 == 0, v.shape
+    lo = (v[..., 0::2] & 0x0F).astype(jnp.uint8)
+    hi = (v[..., 1::2] & 0x0F).astype(jnp.uint8)
+    return (lo | (hi << 4)).astype(jnp.int8)
+
+
+def unpack_int4(p: jax.Array) -> jax.Array:
+    """Inverse of :func:`pack_int4`: sign-extended int8 codes in [-8, 7]."""
+    pu = p.astype(jnp.uint8)
+    lo = (pu & 0x0F).astype(jnp.int8)
+    hi = ((pu >> 4) & 0x0F).astype(jnp.int8)
+    sx = lambda t: jnp.where(t >= 8, t - 16, t).astype(jnp.int8)
+    out = jnp.stack([sx(lo), sx(hi)], axis=-1)
+    return out.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
 
 
 def attn_impl() -> str:

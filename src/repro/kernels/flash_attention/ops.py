@@ -17,10 +17,11 @@ import jax.numpy as jnp
 from repro.kernels.common import pad_axis, pad_positions, use_interpret
 from repro.kernels.flash_attention.kernel import (flash_attention_bh,
                                                  flash_attention_fwd,
-                                                 flash_decode_fwd)
+                                                 flash_decode_fwd,
+                                                 flash_decode_quant_fwd)
 
 __all__ = ["flash_attention", "flash_attention_gqa_fwd", "flash_decode",
-           "flash_attention_bh"]
+           "flash_decode_quant", "flash_attention_bh"]
 
 
 def _default_positions(B: int, n: int) -> jax.Array:
@@ -100,6 +101,40 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
     out5 = flash_decode_fwd(
         q5, pad_axis(k, 1, Tp).transpose(0, 2, 1, 3),
         pad_axis(v, 1, Tp).transpose(0, 2, 1, 3),
+        q_positions.astype(jnp.int32),
+        pad_positions(kv_positions.astype(jnp.int32), Tp),
+        causal=causal, window=window, softcap=softcap, block_k=bk,
+        interpret=interpret)
+    return out5.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
+
+
+def flash_decode_quant(q: jax.Array, k_codes: jax.Array, k_scale: jax.Array,
+                       v_codes: jax.Array, v_scale: jax.Array,
+                       q_positions: jax.Array, kv_positions: jax.Array, *,
+                       causal: bool = True, window: int = 0,
+                       softcap: float = 0.0, block_k: int = 128,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-step attention against a Proteus-quantized (ring) KV cache.
+
+    q: (B, S, Hq, D); codes: (B, T, Hkv, Dc) int8 (Dc = D, or D//2 when
+    nibble-packed int4); scales: (B, T, Hkv) fp32 per (slot, kv head) row;
+    positions as in :func:`flash_decode`. Dequantization happens inside the
+    kernel, per tile in VMEM — HBM reads only the narrow codes + scales.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    B, S, Hq, D = q.shape
+    _, T, Hkv, _ = k_codes.shape
+    G = Hq // Hkv
+    bk = min(block_k, T)
+    Tp = -(-T // bk) * bk
+    q5 = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    out5 = flash_decode_quant_fwd(
+        q5,
+        pad_axis(k_codes, 1, Tp).transpose(0, 2, 1, 3),
+        pad_axis(k_scale, 1, Tp).transpose(0, 2, 1),
+        pad_axis(v_codes, 1, Tp).transpose(0, 2, 1, 3),
+        pad_axis(v_scale, 1, Tp).transpose(0, 2, 1),
         q_positions.astype(jnp.int32),
         pad_positions(kv_positions.astype(jnp.int32), Tp),
         causal=causal, window=window, softcap=softcap, block_k=bk,

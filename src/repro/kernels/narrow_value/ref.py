@@ -1,8 +1,15 @@
-"""Pure-jnp oracles for the narrow-value kernels."""
+"""Pure-jnp oracles for the narrow-value kernels.
+
+The int4 nibble pack/unpack oracle is the shared canonical implementation in
+``repro.kernels.common`` (also re-exported by ``repro.core.proteus``) — the
+Pallas kernels in ``kernel.py`` are its hardware lowering.
+"""
 from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
+
+from repro.kernels.common import pack_int4, unpack_int4
 
 
 def required_bits_ref(x: jax.Array, block: int = 256) -> jax.Array:
@@ -13,14 +20,8 @@ def required_bits_ref(x: jax.Array, block: int = 256) -> jax.Array:
 
 
 def pack_int4_ref(v: jax.Array) -> jax.Array:
-    lo = (v[0::2] & 0x0F).astype(jnp.uint8)
-    hi = (v[1::2] & 0x0F).astype(jnp.uint8)
-    return (lo | (hi << 4)).astype(jnp.int8)
+    return pack_int4(v)
 
 
 def unpack_int4_ref(p: jax.Array) -> jax.Array:
-    pu = p.astype(jnp.uint8)
-    lo = (pu & 0x0F).astype(jnp.int8)
-    hi = ((pu >> 4) & 0x0F).astype(jnp.int8)
-    sx = lambda t: jnp.where(t >= 8, t - 16, t).astype(jnp.int8)
-    return jnp.stack([sx(lo), sx(hi)], axis=-1).reshape(-1)
+    return unpack_int4(p)

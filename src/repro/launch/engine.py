@@ -177,26 +177,34 @@ class ServeEngine:
 
     def step(self) -> bool:
         """Admit waiting requests, run one fused decode chunk, retire finished
-        slots. Returns False when fully drained."""
+        slots. Returns False when fully drained.
+
+        EOS detection ran on device inside the fused chunk (the scan carries
+        a per-slot ``done`` flag and a valid-token count), so retirement here
+        is a per-slot slice — no host-side scan over the token buffer."""
         self._admit()
         if not self._active:
             return False
         t0 = time.perf_counter()
-        self.cache, self._tok, self._key, toks = self._generate(
-            self.params, self.cache, self._tok, self._key)
+        eos = jnp.int32(-1 if self.eos_id is None else self.eos_id)
+        (self.cache, self._tok, self._key, done, n_valid,
+         toks) = self._generate(self.params, self.cache, self._tok,
+                                self._key, eos)
         toks_np = np.asarray(toks)          # ONE host sync per chunk
+        done_np = np.asarray(done)
+        n_np = np.asarray(n_valid)
         self.stats["chunk_seconds"].append(time.perf_counter() - t0)
         self.stats["decode_dispatches"] += 1
         for slot in list(self._active):
             st = self._active[slot]
             cap = min(st.request.max_new_tokens,
                       self.max_len - self.prompt_len)
-            for t in toks_np[slot]:
-                st.produced.append(int(t))
-                done_eos = self.eos_id is not None and int(t) == self.eos_id
-                if done_eos or len(st.produced) >= cap:
-                    self._retire(slot, "eos" if done_eos else "length")
-                    break
+            take = min(int(n_np[slot]), cap - len(st.produced))
+            st.produced.extend(int(t) for t in toks_np[slot][:take])
+            if bool(done_np[slot]) and take == int(n_np[slot]):
+                self._retire(slot, "eos")
+            elif len(st.produced) >= cap:
+                self._retire(slot, "length")
         return bool(self._active or self._queue)
 
     def _retire(self, slot: int, reason: str) -> None:

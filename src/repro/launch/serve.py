@@ -89,12 +89,13 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), rep)
     gkey = jax.device_put(jax.random.PRNGKey(seed + 1), rep)
 
+    eos = jnp.int32(-1)          # batch mode: length-only stopping
     if warmup:     # compile outside the timed region (clone: both jits donate)
         if engine == "loop":
             jax.block_until_ready(decode(params, _clone(cache), tok))
         else:
             jax.block_until_ready(
-                generate(params, _clone(cache), tok, gkey)[3])
+                generate(params, _clone(cache), tok, gkey, eos)[5])
 
     step_times: List[float] = []
     out_tokens: List[np.ndarray] = []
@@ -120,7 +121,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         chunks: List[np.ndarray] = []
         for _ in range(n_chunks):
             ts = time.perf_counter()
-            cache, tok, gkey, toks_d = generate(params, cache, tok, gkey)
+            cache, tok, gkey, _done, _n, toks_d = generate(
+                params, cache, tok, gkey, eos)
             chunks.append(np.asarray(toks_d))           # host sync, per chunk
             dispatches += 1
             step_times.append(time.perf_counter() - ts)
@@ -184,10 +186,16 @@ def main() -> None:
                     choices=["auto", "pallas", "jnp"],
                     help="attention backend for every model family "
                     "(sets REPRO_ATTN_IMPL before programs are traced)")
+    ap.add_argument("--kv-quant", default=None,
+                    choices=["off", "int8", "int4", "auto"],
+                    help="Proteus-quantized KV cache for the decode hot path "
+                    "(sets REPRO_KV_QUANT before programs are traced)")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
     if args.attn_impl:
         os.environ["REPRO_ATTN_IMPL"] = args.attn_impl
+    if args.kv_quant:
+        os.environ["REPRO_KV_QUANT"] = args.kv_quant
     if args.mode == "queue":
         eng = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
                           requests=args.requests, prompt_len=args.prompt_len,

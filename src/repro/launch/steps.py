@@ -216,7 +216,8 @@ def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
     generate = jax.jit(
         make_generate_step(model, plan, chunk=chunk, temperature=temperature,
                            top_k=top_k),
-        donate_argnums=(1,), out_shardings=(cache_sh, rep, rep, rep))
+        donate_argnums=(1,),
+        out_shardings=(cache_sh, rep, rep, rep, rep, rep))
     return prefill, generate, rep, cache_sh
 
 
@@ -229,25 +230,42 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
     sampling) into ONE on-device program. Jit it with ``donate_argnums=(1,)``
     so the cache is updated in place (no second live copy).
 
-        generate_step(params, cache, tok, key) -> (cache, tok, key, toks)
+        generate_step(params, cache, tok, key, eos_id)
+            -> (cache, tok, key, done, n_valid, toks)
 
     ``tok`` (B, 1) is the next token to feed (from prefill argmax or the
     previous chunk); ``toks`` (B, chunk) are the emitted tokens, the first
     being ``tok`` itself — byte-identical to the per-token loop's output.
+
+    EOS detection runs on device: ``eos_id`` is a traced int32 scalar (-1
+    disables it; token ids are non-negative, so -1 never matches). The scan
+    carries a per-slot ``done`` flag — once a slot emits EOS its sampled
+    tokens are frozen (the EOS token is re-fed, so the tail of the chunk is
+    deterministic) and ``n_valid`` (B,) counts the tokens up to and including
+    EOS. The engine retires slots from ``(done, n_valid)`` without scanning
+    token buffers on the host.
     """
 
-    def generate_step(params, cache, tok, key):
+    def generate_step(params, cache, tok, key, eos_id):
         with use_plan(plan):
+            B = tok.shape[0]
+
             def body(carry, _):
-                cache, tok, key = carry
+                cache, tok, key, done, n_valid = carry
+                emitted = tok[:, 0]
+                done_now = done | (emitted == eos_id)
+                n_valid = n_valid + jnp.where(done, 0, 1).astype(jnp.int32)
                 logits, cache = model.decode_step(params, cache, tok)
                 key, sub = jax.random.split(key)
                 nxt = sample_tokens(logits[:, -1], sub, temperature, top_k)
-                return (cache, nxt[:, None], key), tok[:, 0]
+                nxt = jnp.where(done_now, emitted, nxt)   # freeze after EOS
+                return (cache, nxt[:, None], key, done_now, n_valid), emitted
 
-            (cache, tok, key), toks = jax.lax.scan(
-                body, (cache, tok, key), None, length=chunk)
-        return cache, tok, key, toks.T      # toks: (B, chunk)
+            done0 = jnp.zeros((B,), bool)
+            n0 = jnp.zeros((B,), jnp.int32)
+            (cache, tok, key, done, n_valid), toks = jax.lax.scan(
+                body, (cache, tok, key, done0, n0), None, length=chunk)
+        return cache, tok, key, done, n_valid, toks.T    # toks: (B, chunk)
     return generate_step
 
 

@@ -120,9 +120,16 @@ def main() -> None:
                     choices=["auto", "pallas", "jnp"],
                     help="attention backend (sets REPRO_ATTN_IMPL before "
                     "the train step is traced)")
+    ap.add_argument("--kv-quant", default=None,
+                    choices=["off", "int8", "int4", "auto"],
+                    help="Proteus-quantized KV cache for any eval/serve "
+                    "prefill+decode launched from this process (sets "
+                    "REPRO_KV_QUANT; the train step itself has no KV cache)")
     args = ap.parse_args()
     if args.attn_impl:
         os.environ["REPRO_ATTN_IMPL"] = args.attn_impl
+    if args.kv_quant:
+        os.environ["REPRO_KV_QUANT"] = args.kv_quant
     run = RunConfig(total_steps=args.steps, learning_rate=args.lr,
                     microbatches=1)
     out = train(args.arch, smoke=args.smoke, steps=args.steps,

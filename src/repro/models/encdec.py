@@ -17,8 +17,9 @@ from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
 from repro.models.layers import (chunked_attention, dense, gated_mlp,
-                                 ring_cache_update, rms_norm, rope,
-                                 softmax_xent)
+                                 kv_cache_axes, kv_cache_init, kv_cache_len,
+                                 kv_cache_update, kv_cast, maybe_kv_quantize,
+                                 rms_norm, rope, softmax_xent)
 from repro.models.model import attn_param_specs, mlp_param_specs, qkv
 
 
@@ -143,15 +144,16 @@ class EncDecLM:
         kv = (batch, max_len, cfg.num_kv_heads, dh)
         xkv = (batch, src, cfg.num_kv_heads, dh)
         return {
-            "k": jnp.zeros((L,) + kv, self.cdtype),
-            "v": jnp.zeros((L,) + kv, self.cdtype),
-            "xk": jnp.zeros((L,) + xkv, self.cdtype),
-            "xv": jnp.zeros((L,) + xkv, self.cdtype),
+            "k": kv_cache_init((L,) + kv, self.cdtype),
+            "v": kv_cache_init((L,) + kv, self.cdtype),
+            "xk": kv_cache_init((L,) + xkv, self.cdtype),
+            "xv": kv_cache_init((L,) + xkv, self.cdtype),
             "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     def cache_logical_axes(self):
-        kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        kv = kv_cache_axes(
+            ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd"))
         return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ("act_batch",)}
 
     def prefill(self, params, batch, max_len=None):
@@ -174,7 +176,7 @@ class EncDecLM:
             kk = k.astype(self.cdtype)
             if T > S:
                 kk = jnp.pad(kk, ((0, 0), (0, T - S), (0, 0), (0, 0)))
-            return kk
+            return maybe_kv_quantize(kk)
 
         def body(carry, p):
             h = carry
@@ -193,7 +195,8 @@ class EncDecLM:
                               p["mlp"]["wi_gate"], p["mlp"]["wi_up"],
                               p["mlp"]["wo"])
             return h, (store(k), store(v),
-                       kx.astype(self.cdtype), vx.astype(self.cdtype))
+                       maybe_kv_quantize(kx.astype(self.cdtype)),
+                       maybe_kv_quantize(vx.astype(self.cdtype)))
 
         x, (ck, cv, cxk, cxv) = jax.lax.scan(body, x, params["dec_blocks"])
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
@@ -207,7 +210,7 @@ class EncDecLM:
         x = params["embed"].astype(self.cdtype)[tokens]
         pos = cache["pos"]                                   # (B,)
         positions = pos[:, None].astype(jnp.int32)
-        T = cache["k"].shape[2]
+        T = kv_cache_len(cache["k"])
 
         def body(carry, xs):
             h = carry
@@ -215,15 +218,15 @@ class EncDecLM:
             p = mod.constrain_tree(p, self._dec_layer())
             xn = rms_norm(h, p["ln1"], cfg.norm_eps)
             q, k, v = qkv(cfg, p["self_attn"], xn, positions)
-            ck = ring_cache_update(ck, k, jnp.minimum(pos, T - 1))
-            cv = ring_cache_update(cv, v, jnp.minimum(pos, T - 1))
-            o = chunked_attention(q, ck.astype(h.dtype), cv.astype(h.dtype),
+            ck = kv_cache_update(ck, k, jnp.minimum(pos, T - 1))
+            cv = kv_cache_update(cv, v, jnp.minimum(pos, T - 1))
+            o = chunked_attention(q, kv_cast(ck, h.dtype), kv_cast(cv, h.dtype),
                                   causal=True, q_offset=pos,
                                   kv_valid_len=pos + 1, chunk_kv=min(1024, T))
             h = h + dense(o, p["self_attn"]["w_o"], "bshe,hed->bsd")
             xn = rms_norm(h, p["ln_x"], cfg.norm_eps)
             qx = dense(xn, p["cross_attn"]["w_q"], "bsd,dhe->bshe")
-            ox = chunked_attention(qx, xk.astype(h.dtype), xv.astype(h.dtype),
+            ox = chunked_attention(qx, kv_cast(xk, h.dtype), kv_cast(xv, h.dtype),
                                    causal=False, q_offset=0)
             h = h + dense(ox, p["cross_attn"]["w_o"], "bshe,hed->bsd")
             h = h + gated_mlp(rms_norm(h, p["ln2"], cfg.norm_eps),

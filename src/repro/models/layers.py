@@ -13,11 +13,17 @@ elsewhere):
 
 Both keep the working set per step at one (q-chunk x kv-chunk) tile — the
 HBM->VMEM data-movement-minimization analogue of processing-using-memory.
+
+The decode hot path additionally supports a Proteus-quantized KV cache
+(``REPRO_KV_QUANT``, :class:`QKVCache` below): k/v may arrive as block-scaled
+int8 / packed-int4 codes + per-row scales, consumed directly by the Pallas
+decode kernel (in-kernel dequant) and dequantized up front on the jnp path.
 """
 from __future__ import annotations
 
 import math
 import warnings
+from dataclasses import dataclass
 from functools import partial
 from typing import Any, Optional, Tuple
 
@@ -25,9 +31,12 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.mimdram import constrain
-from repro.kernels.common import attn_impl, pad_axis, pad_positions
+from repro.core.proteus import required_bits_float
+from repro.kernels.common import (attn_impl, kv_quant_mode, pack_int4,
+                                  pad_axis, pad_positions, unpack_int4)
 from repro.kernels.flash_attention.ops import (flash_attention_gqa_fwd,
-                                               flash_decode)
+                                               flash_decode,
+                                               flash_decode_quant)
 
 # Pallas decode kernel: the whole (G, S) query block stays VMEM-resident
 # across the kv stream, so the positional path only routes to it while the
@@ -131,6 +140,159 @@ def ring_position_ids(batch: int, total: int, cache_len: int) -> jax.Array:
 
 
 # ---------------------------------------------------------------------------
+# Proteus-quantized KV cache (REPRO_KV_QUANT=off|int8|int4|auto)
+#
+# Decode is memory-bandwidth-bound: every generated token streams the whole
+# ring KV cache through the decode kernel, so kv bytes/token — not FLOPs —
+# sets tokens/s. The Proteus runtime's narrow-value machinery applied to that
+# stream: K/V rows are stored as block-scaled int8 (or nibble-packed int4)
+# codes with one fp32 scale per (slot, kv head) row (block = head_dim), and
+# the Pallas decode kernel dequantizes per tile in VMEM — HBM reads only the
+# narrow codes. ``auto`` keeps int8 storage but picks the quantization grid
+# per tensor data-aware via ``required_bits_float`` (uniform-magnitude
+# tensors take the int4 grid; spiky ones the int8 grid) — the DBPE analogue,
+# transparent to every call site.
+# ---------------------------------------------------------------------------
+# auto-mode error target (per-element quant error vs block mean |x|): the
+# narrowest crest (uniform magnitudes, crest = 1) needs ceil(log2(1/(2r)+1))+1
+# bits, so r = 0.1 is the loosest target at which the int4 grid (4 bits,
+# crest <= 1.4) is ever feasible while gaussian-crest (~3.5) rows still
+# escalate to the int8 grid.
+KV_QUANT_RTOL = 0.1
+
+# Documented worst |output| deviation vs the bf16 cache for unit-normal
+# q/k/v — the single source of truth for the pytest gate, the bench/CI gate
+# (benchmarks/bench_kernels.py), and the README error-budget table. ``auto``
+# stores int8-width codes, so it inherits the int8 budget.
+KV_ERROR_BUDGET = {"int8": 0.05, "int4": 0.25, "auto": 0.05}
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class QKVCache:
+    """Quantized KV-cache leaf: ``codes`` int8 ``(..., T, H, Dc)`` with
+    ``Dc = D`` (int8/auto) or ``D // 2`` (nibble-packed int4), and ``scale``
+    fp32 ``(..., T, H)``. Static shapes and a flat two-leaf pytree, so the
+    fused ``lax.scan`` decode loop, donation, and the engine's slot swaps
+    work unchanged."""
+
+    codes: jax.Array
+    scale: jax.Array
+
+    def tree_flatten(self):
+        return (self.codes, self.scale), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def kv_len(self) -> int:
+        return self.codes.shape[-3]
+
+    @property
+    def num_heads(self) -> int:
+        return self.codes.shape[-2]
+
+
+def _kv_qmax(x: jax.Array, mode: str):
+    if mode == "int8":
+        return 127.0
+    if mode == "int4":
+        return 7.0
+    # auto: data-aware narrow-value detection over head_dim rows (the quant
+    # blocks); <= 4 consequential bits -> the int4 grid is safe.
+    bits = required_bits_float(x, block=x.shape[-1], rtol=KV_QUANT_RTOL)
+    return jnp.where(bits <= 4, 7.0, 127.0)
+
+
+def kv_quantize(x: jax.Array, mode: str) -> QKVCache:
+    """Symmetric per-row quantization of ``x`` (..., T, H, D)."""
+    xf = x.astype(jnp.float32)
+    qmax = _kv_qmax(xf, mode)
+    maxabs = jnp.max(jnp.abs(xf), axis=-1)
+    scale = jnp.where(maxabs == 0, 1.0, maxabs / qmax)
+    codes = jnp.clip(jnp.round(xf / scale[..., None]),
+                     -qmax - 1, qmax).astype(jnp.int8)
+    if mode == "int4":
+        codes = pack_int4(codes)
+    return QKVCache(codes, scale.astype(jnp.float32))
+
+
+def kv_dequantize(qkv: QKVCache, head_dim: int, dtype) -> jax.Array:
+    """jnp fallback dequant (non-TPU / forced-jnp backends): the Pallas
+    decode kernel dequantizes in VMEM instead and never calls this."""
+    codes = qkv.codes
+    if codes.shape[-1] != head_dim:
+        codes = unpack_int4(codes)
+    return (codes.astype(jnp.float32)
+            * qkv.scale[..., None]).astype(dtype)
+
+
+def maybe_kv_quantize(x: jax.Array, mode: Optional[str] = None):
+    """Quantize a cache-layout tensor unless the mode is ``off``."""
+    mode = kv_quant_mode() if mode is None else mode
+    return x if mode == "off" else kv_quantize(x, mode)
+
+
+def kv_cache_init(shape: Tuple[int, ...], dtype,
+                  mode: Optional[str] = None):
+    """Zeros KV-cache leaf for logical shape ``(..., T, H, D)``: a plain
+    array when quantization is off, else a :class:`QKVCache`."""
+    mode = kv_quant_mode() if mode is None else mode
+    if mode == "off":
+        return jnp.zeros(shape, dtype)
+    dc = shape[-1] // 2 if mode == "int4" else shape[-1]
+    return QKVCache(jnp.zeros(shape[:-1] + (dc,), jnp.int8),
+                    jnp.zeros(shape[:-1], jnp.float32))
+
+
+def kv_cache_axes(axes: Tuple, mode: Optional[str] = None):
+    """Logical-axis tree matching :func:`kv_cache_init`'s structure."""
+    mode = kv_quant_mode() if mode is None else mode
+    if mode == "off":
+        return axes
+    return QKVCache(tuple(axes), tuple(axes[:-1]))
+
+
+def kv_cache_store(k: jax.Array, total: int, cache_len: int,
+                   mode: Optional[str] = None):
+    """Prefill store: ring-place then (maybe) quantize in place."""
+    mode = kv_quant_mode() if mode is None else mode
+    ring = ring_cache_store(k, total, cache_len)
+    return ring if mode == "off" else kv_quantize(ring, mode)
+
+
+def kv_cache_update(cache, new: jax.Array, slot: jax.Array,
+                    mode: Optional[str] = None):
+    """Per-token ring write: quantizes ``new`` (B, 1, H, D) row-wise before
+    the per-row dynamic_update_slice when the cache is quantized."""
+    if not isinstance(cache, QKVCache):
+        return ring_cache_update(cache, new, slot)
+    mode = kv_quant_mode() if mode is None else mode
+    q = kv_quantize(new, mode)
+    return QKVCache(ring_cache_update(cache.codes, q.codes, slot),
+                    ring_cache_update(cache.scale, q.scale, slot))
+
+
+def kv_cache_len(cache) -> int:
+    """Cache capacity T of a (possibly stacked, possibly quantized) leaf."""
+    return (cache.codes if isinstance(cache, QKVCache) else cache).shape[-3]
+
+
+def kv_cast(cache, dtype):
+    """``cache.astype(dtype)`` for plain arrays; identity for QKVCache (the
+    attention dispatch consumes codes+scales directly)."""
+    return cache if isinstance(cache, QKVCache) else cache.astype(dtype)
+
+
+def stack_trees(xs):
+    """Stack a list of identically-structured pytrees leaf-wise (the
+    unrolled-layers analogue of ``lax.scan`` ys stacking)."""
+    return jax.tree_util.tree_map(lambda *ls: jnp.stack(ls), *xs)
+
+
+# ---------------------------------------------------------------------------
 # Chunked online-softmax attention (GQA, causal / sliding-window / cross)
 # ---------------------------------------------------------------------------
 def _attn_tile(qc, kc, vc, mask, m, l, acc, scale, cap):
@@ -161,8 +323,8 @@ def _attn_tile(qc, kc, vc, mask, m, l, acc, scale, cap):
 
 def chunked_attention(
     q: jax.Array,                 # (B, S, Hq, D)
-    k: jax.Array,                 # (B, T, Hkv, D)
-    v: jax.Array,                 # (B, T, Hkv, D)
+    k: Any,                       # (B, T, Hkv, D) array, or QKVCache
+    v: Any,                       # (B, T, Hkv, D) array, or QKVCache
     *,
     causal: bool = True,
     window: int = 0,              # >0: sliding-window attention
@@ -182,8 +344,13 @@ def chunked_attention(
     valid length, so it is masked) and the output sliced back — odd prompt
     lengths are legal on every path.
     """
+    quant = isinstance(k, QKVCache)
     B, S, Hq, D = q.shape
-    _, T, Hkv, _ = k.shape
+    if quant:
+        assert isinstance(v, QKVCache), "k quantized but v is not"
+        T, Hkv = k.kv_len, k.num_heads
+    else:
+        _, T, Hkv, _ = k.shape
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(D)
     cq = min(chunk_q, S)
@@ -191,7 +358,7 @@ def chunked_attention(
     backend = attn_impl() if impl is None else impl
 
     # training/prefill path: flash custom-VJP (O(S) activation memory)
-    if (kv_positions is None and kv_valid_len is None and S > 1
+    if (not quant and kv_positions is None and kv_valid_len is None and S > 1
             and isinstance(q_offset, int) and q_offset == 0):
         Sp = -(-S // cq) * cq
         Tp = -(-T // ck) * ck
@@ -226,6 +393,12 @@ def chunked_attention(
                 valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32),
                                          (B,))
                 kv_pos = jnp.where(kv_pos < valid[:, None], kv_pos, -1)
+            if quant:
+                # in-kernel dequant: HBM reads only codes + scales
+                return flash_decode_quant(
+                    q, k.codes, k.scale, v.codes, v.scale, q_pos, kv_pos,
+                    causal=causal, window=window, softcap=attn_softcap,
+                    block_k=ck)
             return flash_decode(q, k, v, q_pos, kv_pos, causal=causal,
                                 window=window, softcap=attn_softcap,
                                 block_k=ck)
@@ -234,7 +407,12 @@ def chunked_attention(
             f"exceeds PALLAS_DECODE_MAX_Q_ROWS={PALLAS_DECODE_MAX_Q_ROWS}; "
             "falling back to the jnp path", stacklevel=2)
 
-    # generic jnp fallback (batched positions, any q length)
+    # generic jnp fallback (batched positions, any q length); quantized kv
+    # is dequantized up front here — only the Pallas decode kernel reads the
+    # narrow codes directly.
+    if quant:
+        k = kv_dequantize(k, D, q.dtype)
+        v = kv_dequantize(v, D, q.dtype)
     S0 = S
     Sp = -(-S // cq) * cq
     Tp = -(-T // ck) * ck

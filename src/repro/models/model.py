@@ -25,9 +25,10 @@ from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
 from repro.models.layers import (chunked_attention, dense, gated_mlp,
-                                 ring_cache_store, ring_cache_update,
-                                 ring_position_ids, rms_norm, rope,
-                                 softmax_xent)
+                                 kv_cache_axes, kv_cache_init, kv_cache_len,
+                                 kv_cache_store, kv_cache_update, kv_cast,
+                                 ring_cache_update, ring_position_ids,
+                                 rms_norm, rope, softmax_xent, stack_trees)
 from repro.models.moe import moe_ffn, moe_param_specs
 
 
@@ -193,14 +194,15 @@ class TransformerLM:
         kv = (batch, T, cfg.num_kv_heads, cfg.resolved_head_dim)
         L = cfg.num_layers
         return {
-            "k": jnp.zeros((L,) + kv, self.cdtype),
-            "v": jnp.zeros((L,) + kv, self.cdtype),
+            "k": kv_cache_init((L,) + kv, self.cdtype),
+            "v": kv_cache_init((L,) + kv, self.cdtype),
             "pos_ids": jnp.full((batch, T), -1, jnp.int32),
             "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     def cache_logical_axes(self) -> Dict[str, Any]:
-        kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        kv = kv_cache_axes(
+            ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd"))
         return {"k": kv, "v": kv, "pos_ids": ("act_batch", "cache_seq"),
                 "pos": ("act_batch",)}
 
@@ -224,7 +226,7 @@ class TransformerLM:
         window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
 
         def store(k):
-            return ring_cache_store(k.astype(self.cdtype), S, T)
+            return kv_cache_store(k.astype(self.cdtype), S, T)
 
         def body(carry, layer_p):
             h = carry
@@ -254,7 +256,7 @@ class TransformerLM:
                 x, (k1, v1) = body(x, layer_p)
                 ks.append(k1)
                 vs.append(v1)
-            ck, cv = jnp.stack(ks), jnp.stack(vs)
+            ck, cv = stack_trees(ks), stack_trees(vs)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["head"])
         logits = dense(x[:, -1:], head, "bsd,dv->bsv")
@@ -274,7 +276,7 @@ class TransformerLM:
         cfg = self.cfg
         x = params["embed"].astype(self.cdtype)[tokens]          # (B,1,D)
         pos = cache["pos"]                                       # (B,)
-        T = cache["k"].shape[2]
+        T = kv_cache_len(cache["k"])
         slot = (pos % T).astype(jnp.int32)                       # (B,)
         positions = pos[:, None].astype(jnp.int32)               # (B, 1)
         window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
@@ -286,10 +288,10 @@ class TransformerLM:
             layer_p = mod.constrain_tree(layer_p, self.block_specs())
             xn = rms_norm(h, layer_p["ln1"], cfg.norm_eps)
             q, k, v = qkv(cfg, layer_p["attn"], xn, positions)
-            ck = ring_cache_update(ck, k, slot)
-            cv = ring_cache_update(cv, v, slot)
+            ck = kv_cache_update(ck, k, slot)
+            cv = kv_cache_update(cv, v, slot)
             o = chunked_attention(
-                q, ck.astype(h.dtype), cv.astype(h.dtype), causal=True,
+                q, kv_cast(ck, h.dtype), kv_cast(cv, h.dtype), causal=True,
                 window=window, q_offset=pos, kv_positions=pos_ids,
                 chunk_kv=min(1024, T))
             h = h + dense(o, layer_p["attn"]["w_o"], "bshe,hed->bsd")
@@ -313,7 +315,7 @@ class TransformerLM:
                 x, (k1, v1) = body(x, xs)
                 ks.append(k1)
                 vs.append(v1)
-            ck, cv = jnp.stack(ks), jnp.stack(vs)
+            ck, cv = stack_trees(ks), stack_trees(vs)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["head"])
         logits = dense(x, head, "bsd,dv->bsv")

@@ -15,8 +15,10 @@ from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
 from repro.models.layers import (chunked_attention, dense, gated_mlp,
-                                 ring_cache_store, ring_cache_update,
-                                 ring_position_ids, rms_norm, softmax_xent)
+                                 kv_cache_axes, kv_cache_init, kv_cache_len,
+                                 kv_cache_store, kv_cache_update, kv_cast,
+                                 ring_cache_update, ring_position_ids,
+                                 rms_norm, softmax_xent)
 from repro.models.model import attn_param_specs, mlp_param_specs, qkv
 from repro.models.rglru import (init_rglru_state, recurrent_block,
                                 rglru_param_specs)
@@ -105,11 +107,11 @@ class GriffinLM:
                                   q_offset=0)
         else:
             ck, cv = cache
-            T = ck.shape[1]
+            T = kv_cache_len(ck)
             slot = (pos % T).astype(jnp.int32)
-            ck = ring_cache_update(ck, k, slot)
-            cv = ring_cache_update(cv, v, slot)
-            o = chunked_attention(q, ck.astype(x.dtype), cv.astype(x.dtype),
+            ck = kv_cache_update(ck, k, slot)
+            cv = kv_cache_update(cv, v, slot)
+            o = chunked_attention(q, kv_cast(ck, x.dtype), kv_cast(cv, x.dtype),
                                   causal=True, window=cfg.local_window,
                                   q_offset=pos, kv_positions=pos_ids,
                                   chunk_kv=min(1024, T))
@@ -173,8 +175,8 @@ class GriffinLM:
         return {
             "rec1": stack(self._rec_state_zero(batch)),
             "rec2": stack(self._rec_state_zero(batch)),
-            "k": jnp.zeros((G,) + kv, self.cdtype),
-            "v": jnp.zeros((G,) + kv, self.cdtype),
+            "k": kv_cache_init((G,) + kv, self.cdtype),
+            "v": kv_cache_init((G,) + kv, self.cdtype),
             "tail": [self._rec_state_zero(batch) for _ in range(self.n_tail)],
             "pos_ids": jnp.full((batch, T), -1, jnp.int32),
             "pos": jnp.zeros((batch,), jnp.int32),
@@ -183,7 +185,8 @@ class GriffinLM:
     def cache_logical_axes(self):
         rec = {"h": ("layers", "act_batch", "act_embed"),
                "conv": ("layers", "act_batch", None, "act_embed")}
-        kv = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        kv = kv_cache_axes(
+            ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd"))
         return {
             "rec1": rec, "rec2": rec, "k": kv, "v": kv,
             "tail": [{"h": ("act_batch", "act_embed"),
@@ -200,7 +203,7 @@ class GriffinLM:
         x = params["embed"].astype(self.cdtype)[tokens]
 
         def store(k):
-            return ring_cache_store(k.astype(self.cdtype), S, T)
+            return kv_cache_store(k.astype(self.cdtype), S, T)
 
         def group_body(carry, gp):
             h = carry
@@ -238,7 +241,7 @@ class GriffinLM:
         cfg = self.cfg
         x = params["embed"].astype(self.cdtype)[tokens]      # (B,1,D)
         pos = cache["pos"]                                   # (B,)
-        T = cache["k"].shape[2]
+        T = kv_cache_len(cache["k"])
         slot = (pos % T).astype(jnp.int32)
         pos_ids = ring_cache_update(cache["pos_ids"], pos[:, None], slot)
 

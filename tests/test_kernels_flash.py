@@ -10,11 +10,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.kernels.common import attn_impl
+from repro.kernels.common import attn_impl, kv_quant_mode
 from repro.kernels.flash_attention import flash_attention, flash_attention_bh
-from repro.models.layers import (attention_ref, chunked_attention,
-                                 flash_attention_jnp, flash_attention_pallas,
-                                 ring_cache_store, ring_position_ids)
+from repro.models.layers import (KV_ERROR_BUDGET, attention_ref,
+                                 chunked_attention, flash_attention_jnp,
+                                 flash_attention_pallas, kv_dequantize,
+                                 kv_quantize, ring_cache_store,
+                                 ring_position_ids)
 
 
 def _qkv(rng, B, S, T, Hq, Hkv, D, dtype=jnp.float32):
@@ -163,6 +165,103 @@ def test_flash_decode_mixed_depth_slots(rng):
     oj = chunked_attention(q, k, v, impl="jnp", **kw)
     op = chunked_attention(q, k, v, impl="pallas", **kw)
     np.testing.assert_allclose(np.asarray(op), np.asarray(oj), atol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# Proteus-quantized KV cache: in-kernel dequant decode vs the bf16 oracle
+# ---------------------------------------------------------------------------
+# per-bits error budgets: the shared KV_ERROR_BUDGET from models/layers.py
+# (also gated in benchmarks/bench_kernels.py and tabled in the README)
+KV_BUDGET = KV_ERROR_BUDGET
+
+
+@pytest.mark.parametrize("mode", ["int8", "int4", "auto"])
+@pytest.mark.parametrize("G", [1, 2, 4])
+@pytest.mark.parametrize("cell", ["ring", "valid", "odd"])
+def test_flash_decode_quant_grid(mode, G, cell, rng):
+    """Quant parity grid: the Pallas in-kernel-dequant decode kernel must
+    match the jnp dequant fallback exactly (same dequantized operands), and
+    both must track the bf16 oracle within the per-bits error budget."""
+    B, Hkv, D = 2, 2, 32
+    Hq = G * Hkv
+    cache_len, total = (48, 60) if cell == "odd" else (64, 80)
+    q, k, v = _qkv(rng, B, 1, total, Hq, Hkv, D)
+    kc = ring_cache_store(k, total, cache_len)
+    vc = ring_cache_store(v, total, cache_len)
+    pos = jnp.full((B,), total, jnp.int32)
+    kw = dict(causal=True, q_offset=pos,
+              kv_positions=ring_position_ids(B, total, cache_len),
+              chunk_kv=32 if cell == "odd" else 48)
+    if cell == "valid":
+        kw["kv_valid_len"] = pos + 1
+    qk, qv = kv_quantize(kc, mode), kv_quantize(vc, mode)
+    ref = chunked_attention(q, kc, vc, impl="jnp", **kw)
+    oj = chunked_attention(q, qk, qv, impl="jnp", **kw)
+    op = chunked_attention(q, qk, qv, impl="pallas", **kw)
+    np.testing.assert_allclose(np.asarray(op), np.asarray(oj), atol=2e-5)
+    assert float(np.abs(np.asarray(oj) - np.asarray(ref)).max()) \
+        <= KV_BUDGET[mode]
+
+
+def test_kv_quant_auto_narrow_value_detection(rng):
+    """auto mode is data-aware: uniform-magnitude rows (crest ~ 1) take the
+    int4 grid (codes within [-8, 7]); spiky gaussian rows need the int8
+    grid — the Proteus narrow-value / DBPE behaviour."""
+    flat = jnp.sign(jax.random.normal(rng, (2, 16, 2, 32)))   # |x| == 1
+    qt = kv_quantize(flat, "auto")
+    assert int(jnp.abs(qt.codes).max()) <= 7
+    spiky = jax.random.normal(jax.random.split(rng)[0], (2, 16, 2, 32))
+    qt2 = kv_quantize(spiky, "auto")
+    assert int(jnp.abs(qt2.codes).max()) > 7
+    # the grid choice is transparent: dequant error still tracks the input
+    rt = kv_dequantize(qt, 32, jnp.float32)
+    np.testing.assert_allclose(np.asarray(rt), np.asarray(flat), atol=1e-6)
+
+
+def test_kv_quant_int4_roundtrip_packing(rng):
+    """int4 codes are nibble-packed: half the code bytes, exact pack/unpack
+    roundtrip through the shared repro.kernels.common helpers."""
+    x = jax.random.normal(rng, (2, 8, 2, 32))
+    qt = kv_quantize(x, "int4")
+    assert qt.codes.shape == (2, 8, 2, 16) and qt.codes.dtype == jnp.int8
+    rt = kv_dequantize(qt, 32, jnp.float32)
+    # per-row scale bound: |err| <= scale/2 per element
+    bound = np.asarray(qt.scale)[..., None] * 0.5 + 1e-6
+    assert (np.abs(np.asarray(rt - x)) <= bound).all()
+
+
+def test_kv_quant_mode_knob(monkeypatch):
+    monkeypatch.setenv("REPRO_KV_QUANT", "int8")
+    assert kv_quant_mode() == "int8"
+    monkeypatch.delenv("REPRO_KV_QUANT")
+    assert kv_quant_mode() == "off"
+    monkeypatch.setenv("REPRO_KV_QUANT", "nope")
+    with pytest.raises(ValueError):
+        kv_quant_mode()
+
+
+def test_kv_quant_end_to_end_decode_step(monkeypatch, rng):
+    """TransformerLM prefill + decode with REPRO_KV_QUANT=int8: the decode
+    logits stay close to the bf16-cache run, with zero call-site changes,
+    and the off mode is bit-identical to the pre-quant path."""
+    from repro.configs.base import ModelConfig
+    from repro.models import init_params
+    from repro.models.model import TransformerLM
+
+    cfg = ModelConfig(name="t", family="dense", num_layers=2, d_model=32,
+                      num_heads=4, num_kv_heads=2, d_ff=64, vocab_size=64,
+                      param_dtype="float32", compute_dtype="float32")
+    model = TransformerLM(cfg)
+    params = init_params(model.param_specs(), rng)
+    tokens = jax.random.randint(jax.random.split(rng)[0], (2, 9), 0, 64)
+    outs = {}
+    for mode in ("off", "int8"):
+        monkeypatch.setenv("REPRO_KV_QUANT", mode)
+        logits, cache = model.prefill(params, {"tokens": tokens}, max_len=16)
+        step, cache = model.decode_step(
+            params, cache, jnp.argmax(logits, -1).astype(jnp.int32))
+        outs[mode] = np.asarray(step)
+    np.testing.assert_allclose(outs["int8"], outs["off"], atol=0.1)
 
 
 # ---------------------------------------------------------------------------

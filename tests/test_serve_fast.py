@@ -55,11 +55,13 @@ def test_generate_cache_donated():
     toks = jnp.zeros((2, 8), jnp.int32)
     _, cache = prefill(params, {"tokens": toks})
     k_in = cache["k"]
-    cache, tok, key, out = generate(params, cache,
-                                    jnp.zeros((2, 1), jnp.int32),
-                                    jax.random.PRNGKey(0))
+    cache, tok, key, done, n_valid, out = generate(
+        params, cache, jnp.zeros((2, 1), jnp.int32), jax.random.PRNGKey(0),
+        jnp.int32(-1))
     assert k_in.is_deleted(), "cache was copied, not donated"
     assert out.shape == (2, 4)
+    assert not np.asarray(done).any()            # eos disabled (-1)
+    np.testing.assert_array_equal(np.asarray(n_valid), [4, 4])
 
 
 def test_sample_tokens_modes():
@@ -126,7 +128,7 @@ def test_engine_drains_mixed_queue():
         np.testing.assert_array_equal(got.tokens, ref,
                                       err_msg=f"request {req.uid}")
 
-    # EOS handling reuses the same compiled engine (host-side stop check)
+    # EOS handling reuses the same compiled engine (on-device done flag)
     probe = _reference_greedy(model, params, plan, reqs[1].tokens, prompt_len,
                               eng.max_len, max_new)
     eos = probe[4]
@@ -137,3 +139,63 @@ def test_engine_drains_mixed_queue():
     done = {c.uid: c for c in eng.completions}[99]
     assert done.finish_reason == "eos"
     np.testing.assert_array_equal(done.tokens, probe[:stop + 1])
+
+
+def test_generate_step_on_device_eos():
+    """EOS detection inside the fused scan: the done flag latches per slot,
+    tokens after EOS are frozen to the EOS token, and n_valid counts up to
+    and including it — the engine retires slots without host-side scans."""
+    cfg, model, params, plan = _build("pimref-100m", 2, 8, 24)
+    prefill = jax.jit(make_prefill_step(model, plan, max_len=24))
+    generate = jax.jit(make_generate_step(model, plan, chunk=8),
+                       donate_argnums=(1,))
+    toks = jnp.zeros((2, 8), jnp.int32)
+    logits, cache = prefill(params, {"tokens": toks})
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+
+    # first run with eos disabled to learn the greedy stream
+    ref_cache = jax.tree_util.tree_map(jnp.copy, cache)
+    _, _, _, done, n, ref = generate(params, ref_cache, tok,
+                                     jax.random.PRNGKey(0), jnp.int32(-1))
+    ref = np.asarray(ref)
+    assert not np.asarray(done).any() and (np.asarray(n) == 8).all()
+
+    # pick row 0's 4th greedy token as EOS and replay
+    eos = int(ref[0, 3])
+    stop = int(np.argmax(ref[0] == eos))            # first occurrence
+    _, _, _, done, n, out = generate(params, cache, tok,
+                                     jax.random.PRNGKey(0), jnp.int32(eos))
+    out, done, n = np.asarray(out), np.asarray(done), np.asarray(n)
+    assert done[0] and n[0] == stop + 1
+    np.testing.assert_array_equal(out[0, :stop + 1], ref[0, :stop + 1])
+    assert (out[0, stop:] == eos).all()             # frozen after EOS
+    # row 1 (no EOS in stream, unless it shares the token) stays untouched
+    if eos not in ref[1]:
+        assert not done[1] and n[1] == 8
+        np.testing.assert_array_equal(out[1], ref[1])
+
+
+def test_engine_quantized_kv_greedy_agreement(monkeypatch):
+    """ServeEngine queue drain with REPRO_KV_QUANT=int8: every completion
+    equals the single-request per-token greedy reference traced under the
+    same quantized cache — the Proteus cache is numerics-consistent across
+    the fused scan, slot swaps, and the per-token loop."""
+    monkeypatch.setenv("REPRO_KV_QUANT", "int8")
+    prompt_len, max_new, chunk, slots = 8, 8, 4, 2
+    cfg, model, params, plan = _build("pimref-100m", slots, prompt_len,
+                                      prompt_len + max_new)
+    rng = np.random.default_rng(1)
+    reqs = [Request(uid=i,
+                    tokens=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(3, prompt_len + 1)),
+                    max_new_tokens=n)
+            for i, n in enumerate([3, 8, 5, 2])]
+    eng = ServeEngine(model, params, plan, slots=slots, prompt_len=prompt_len,
+                      max_new=max_new, chunk=chunk)
+    comps = {c.uid: c for c in eng.run(list(reqs))}
+    assert len(comps) == len(reqs) > slots
+    for req in reqs:
+        ref = _reference_greedy(model, params, plan, req.tokens, prompt_len,
+                                eng.max_len, req.max_new_tokens)
+        np.testing.assert_array_equal(comps[req.uid].tokens, ref,
+                                      err_msg=f"request {req.uid}")

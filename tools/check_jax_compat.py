@@ -65,6 +65,14 @@ def find_offenders(repo: str) -> List[str]:
 # Any Pallas call site (pallas_call / pl.* entry points / pltpu.* scratch)
 # must obtain its pallas modules from repro.compat — the entry-point location
 # is version-sensitive and the TPU namespace may be absent entirely.
+#
+# Note (kv-quant PR): the Proteus-quantized decode kernel
+# (flash_decode_quant_fwd) and the block-sparse tile skip reuse the existing
+# import_pallas()/pallas_vmem_scratch() entry points, and the deduped int4
+# nibble pack/unpack helper (repro.kernels.common.pack_int4/unpack_int4) is
+# pure jnp — no new version-sensitive Pallas accessor was needed. If a future
+# kernel needs a NEW pl./pltpu. symbol, add it to repro.compat and extend
+# _PALLAS_NAME below so this lint keeps recognising compat-imported sites.
 _PALLAS_USE = re.compile(
     r"\bpallas_call\s*\(|\bpltpu\s*\.\s*\w+\s*\(|\bpl\s*\.\s*BlockSpec\s*\(")
 # Two-part check so parenthesized multi-line imports pass: the file must
