@@ -107,6 +107,15 @@ CELLS = [
      dict(B=64, S=1, T=2048, Hq=32, Hkv=1, D=128, ck=1024, kv_bits=8)),
     ("decode_mqa_q4", dict(decode=True, Hkv=1, kv_quant="int4"),
      dict(B=64, S=1, T=2048, Hq=32, Hkv=1, D=128, ck=1024, kv_bits=4)),
+    # paged KV (block tables): the paged Pallas kernel streams pool pages
+    # through scalar-prefetched page-table lookups — same HBM stream as the
+    # contiguous decode kernel (the int32 table is B*NP*4 bytes, noise), so
+    # the roofline is the decode cell's; the parity gate is vs the jnp
+    # gather fallback over the same paged cache
+    ("decode_paged", dict(decode=True, paged=True),
+     dict(B=64, S=1, T=32768, Hq=32, Hkv=8, D=128, ck=1024)),
+    ("decode_paged_q8", dict(decode=True, paged=True, kv_quant="int8"),
+     dict(B=64, S=1, T=32768, Hq=32, Hkv=8, D=128, ck=1024, kv_bits=8)),
 ]
 
 # quantized-cell accuracy budget vs the bf16 oracle: the shared
@@ -125,8 +134,8 @@ def _parity_err(spec):
     the Proteus cost model picks for the sample cache."""
     from repro.core.proteus import CostModel
     from repro.models.layers import (attention_ref, chunked_attention,
-                                     kv_quantize, ring_cache_store,
-                                     ring_position_ids)
+                                     kv_quantize, paged_from_ring,
+                                     ring_cache_store, ring_position_ids)
 
     B, D = 2, 32
     S = spec.get("S", 128)
@@ -149,7 +158,12 @@ def _parity_err(spec):
         mode = spec.get("kv_quant")
         if mode:
             bf16 = chunked_attention(q[:, :1], kc, vc, impl="jnp", **args)
+        if spec.get("paged"):
+            kc = paged_from_ring(kc, page_size=32, mode=mode or "off")
+            vc = paged_from_ring(vc, page_size=32, mode=mode or "off")
+        elif mode:
             kc, vc = kv_quantize(kc, mode), kv_quantize(vc, mode)
+        if mode:
             extras["rep"] = CostModel().select_for_tensor(
                 k[:, :total], block=D, err_budget=_kv_budget(mode)).name
         out = chunked_attention(q[:, :1], kc, vc, impl="pallas", **args)

@@ -80,19 +80,63 @@ def run(emit) -> None:
          f"greedy_match={match}")
     assert match, "kv-quant int8: fused tokens diverge from per-token loop"
 
-    eng = serve_queue("pimref-100m", smoke=True, slots=4, requests=8,
-                      prompt_len=PROMPT, gen=16, chunk=4)
+    # Continuous batching over a mixed-length queue with a shared 8-token
+    # system prefix — once with the contiguous per-slot cache (the HBM
+    # baseline: KV is committed statically up front), then with the paged
+    # block-table cache (plain + int8 pages). The paged gates: every request
+    # drains to its full greedy length, prefix pages actually hash-consed
+    # across concurrent slots, and peak KV HBM per served token strictly
+    # below the baseline. greedy_match reports token agreement with the
+    # contiguous engine — informational, not a gate: the contiguous engine
+    # left-pads prompts (shifted absolute RoPE positions) while the paged
+    # engine right-pads, identical only in exact arithmetic; each layout's
+    # byte-identity against per-request references is gated in the tests.
+    qkw = dict(smoke=True, slots=4, requests=8, prompt_len=PROMPT, gen=16,
+               chunk=4, shared_prefix=8)
+    eng = serve_queue("pimref-100m", **qkw)
     s = eng.stats
     recompiles = eng.compile_cache_size()
     per_tok_us = 1e6 / max(s["tokens_per_second"], 1e-9)
     emit("serve/engine/mixed_queue", per_tok_us,
          f"tok_s={s['tokens_per_second']:.1f};"
          f"disp_per_tok={s['dispatches_per_token']:.3f};"
+         f"kv_b_per_tok={s['kv_bytes_per_token']:.1f};"
          f"requests={len(eng.completions)};prefills={s['prefills']};"
          f"generate_programs={recompiles}")
     assert len(eng.completions) == 8, "queue not fully drained"
     assert recompiles in (None, 1), \
         f"fused generate recompiled: {recompiles} programs"
+
+    base_toks = {c.uid: c.tokens for c in eng.completions}
+    for cell, env in (("paged_ps8", {"REPRO_KV_PAGES": "8"}),
+                      ("paged_ps8_kvq8", {"REPRO_KV_PAGES": "8",
+                                          "REPRO_KV_QUANT": "int8"})):
+        os.environ.update(env)
+        try:
+            peng = serve_queue("pimref-100m", **qkw)
+        finally:
+            for k in env:
+                os.environ.pop(k, None)
+        ps = peng.stats
+        ptoks = {c.uid: c.tokens for c in peng.completions}
+        match = all(np.array_equal(ptoks[u], base_toks[u]) for u in base_toks)
+        emit(f"serve/engine/mixed_queue_{cell}",
+             1e6 / max(ps["tokens_per_second"], 1e-9),
+             f"tok_s={ps['tokens_per_second']:.1f};"
+             f"disp_per_tok={ps['dispatches_per_token']:.3f};"
+             f"kv_b_per_tok={ps['kv_bytes_per_token']:.1f};"
+             f"kv_pages_peak={ps['kv_pages_peak']};"
+             f"prefix_hits={ps['prefix_hits']};"
+             f"greedy_match={match}")
+        assert len(peng.completions) == 8, f"{cell}: queue not fully drained"
+        assert all(len(ptoks[u]) == len(base_toks[u]) for u in base_toks), \
+            f"{cell}: completion lengths diverge from contiguous engine"
+        assert all(c.finish_reason != "error" for c in peng.completions), \
+            f"{cell}: error completions in paged drain"
+        assert ps["prefix_hits"] > 0, f"{cell}: shared prefix never reused"
+        assert ps["kv_bytes_per_token"] < s["kv_bytes_per_token"], (
+            f"{cell}: paged KV HBM/token {ps['kv_bytes_per_token']:.1f} not "
+            f"below contiguous baseline {s['kv_bytes_per_token']:.1f}")
 
 
 if __name__ == "__main__":

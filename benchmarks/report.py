@@ -119,7 +119,8 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
     """
     out: Dict[str, Dict[str, float]] = {
         "tokens_s": {}, "dispatches_per_token": {}, "p95_us": {},
-        "speedup": {}, "per_token_p50_us": {},
+        "speedup": {}, "per_token_p50_us": {}, "kv_bytes_per_token": {},
+        "kv_pages_peak": {}, "prefix_hits": {},
     }
     with open(csv_path) as f:
         for line in f:
@@ -139,7 +140,10 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
                 k, v = kv.split("=", 1)
                 field = {"tok_s": "tokens_s",
                          "disp_per_tok": "dispatches_per_token",
-                         "p95_us": "p95_us", "speedup": "speedup"}.get(k)
+                         "p95_us": "p95_us", "speedup": "speedup",
+                         "kv_b_per_tok": "kv_bytes_per_token",
+                         "kv_pages_peak": "kv_pages_peak",
+                         "prefix_hits": "prefix_hits"}.get(k)
                 if field is None:
                     continue
                 try:

@@ -73,6 +73,7 @@ __all__ = [
     "import_pallas",
     "import_pallas_tpu",
     "pallas_call",
+    "pallas_prefetch_grid_spec",
     "pallas_vmem_scratch",
     "tree_map",
     "tree_leaves",
@@ -437,6 +438,23 @@ def import_pallas_tpu():
 def pallas_call(*args, **kwargs):
     """Late-bound pl.pallas_call (resolves against the installed pallas)."""
     return import_pallas().pallas_call(*args, **kwargs)
+
+
+def pallas_prefetch_grid_spec():
+    """The scalar-prefetch grid-spec class (``pltpu.PrefetchScalarGridSpec``),
+    or None when this install lacks it.
+
+    Scalar-prefetch arguments are available to BlockSpec index maps before
+    the kernel body runs — the mechanism that lets the paged decode kernel
+    resolve data-dependent page-table lookups into kv block indices. The
+    class lives in the TPU namespace and its location is version-sensitive,
+    so callers must obtain it here; when it is absent the paged attention
+    dispatch falls back to a pool gather + the dense decode kernel.
+    """
+    pltpu = import_pallas_tpu()
+    if pltpu is None:
+        return None
+    return getattr(pltpu, "PrefetchScalarGridSpec", None)
 
 
 def pallas_vmem_scratch(shape: Tuple[int, ...], dtype):

@@ -79,6 +79,27 @@ def unpack_int4(p: jax.Array) -> jax.Array:
     return out.reshape(p.shape[:-1] + (p.shape[-1] * 2,))
 
 
+def kv_page_size() -> int:
+    """KV-cache page size for the paged (block-table) serving cache.
+
+    ``REPRO_KV_PAGES=<tokens-per-page>``: 0 (default) keeps the contiguous
+    per-slot ring cache; a positive value switches ``kv_cache_init`` & co.
+    to the :class:`~repro.models.layers.PagedKVCache` layout — one pooled
+    page array plus per-slot int32 page tables — which the serving engine
+    pairs with a free-list allocator and hash-consed prefix sharing. Read at
+    trace time, like ``REPRO_KV_QUANT``: set the knob before building jitted
+    programs (the launchers plumb ``--kv-page-size`` here).
+    """
+    v = os.environ.get("REPRO_KV_PAGES", "0")
+    try:
+        ps = int(v)
+    except ValueError:
+        raise ValueError(f"REPRO_KV_PAGES={v!r}: expected a non-negative int")
+    if ps < 0:
+        raise ValueError(f"REPRO_KV_PAGES={v!r}: expected a non-negative int")
+    return ps
+
+
 def attn_impl() -> str:
     """Attention backend for ``chunked_attention``: 'pallas' or 'jnp'.
 

@@ -38,7 +38,8 @@ import math
 import jax
 import jax.numpy as jnp
 
-from repro.compat import import_pallas, pallas_vmem_scratch
+from repro.compat import (import_pallas, pallas_prefetch_grid_spec,
+                          pallas_vmem_scratch)
 from repro.kernels.common import pad_axis, unpack_int4
 
 pl = import_pallas()
@@ -312,6 +313,191 @@ def flash_decode_quant_fwd(q: jax.Array, k_codes: jax.Array,
         ],
         interpret=interpret,
     )(q_positions, kv_positions, q, k_codes, k_scale, v_codes, v_scale)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Paged decode kernels (block-table KV cache)
+#
+# Flash-decoding split-KV over *pages*: the grid runs over each slot's
+# logical pages and a scalar-prefetched page table resolves logical page ->
+# physical pool row inside the kv BlockSpec index maps, so the kernel streams
+# exactly the pages a slot owns straight from the shared pool — no gather
+# materializing a dense per-slot copy in HBM. The pool keeps its storage
+# layout (P, ps, H, D); only one (ps, D) page per kv head moves to VMEM per
+# grid step. Masking stays purely positional: the (B, NP*ps) kv_positions
+# carry the ring/pad/-1 sentinels, so trash-page tiles are either skipped
+# (all -1) or causally masked.
+# ---------------------------------------------------------------------------
+def _flash_decode_paged_kernel(tab_ref, qp_ref, kp_ref, q_ref, k_ref, v_ref,
+                               o_ref, lse_ref, m_ref, l_ref, acc_ref, *,
+                               scale: float, causal: bool, window: int,
+                               softcap: float, n_kv: int):
+    del tab_ref  # consumed by the BlockSpec index maps (scalar prefetch)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        _tile_init(m_ref, l_ref, acc_ref)
+
+    kp = kp_ref[0]
+
+    @pl.when(jnp.max(kp) >= 0)          # skip dead pages (trash / unwritten)
+    def _update():
+        _tile_update(q_ref[0, 0].astype(jnp.float32),
+                     k_ref[0, :, 0].astype(jnp.float32),
+                     v_ref[0, :, 0].astype(jnp.float32),
+                     qp_ref[0], kp, m_ref, l_ref, acc_ref,
+                     scale=scale, causal=causal, window=window,
+                     softcap=softcap)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        _tile_finalize(o_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def flash_decode_paged_fwd(q: jax.Array, k_pages: jax.Array,
+                           v_pages: jax.Array, table: jax.Array,
+                           q_positions: jax.Array, kv_positions: jax.Array, *,
+                           causal: bool = True, window: int = 0,
+                           softcap: float = 0.0,
+                           interpret: bool = True) -> jax.Array:
+    """Paged decode kernel.
+
+    q: (B, Hkv, G, S, D) with small S   k/v pool: (P, ps, Hkv, D)
+    table: (B, NP) int32 physical pool rows (page 0 = trash page)
+    q_positions: (B, S)   kv_positions: (B, NP * ps) (-1 = empty/invalid)
+    Returns out (B, Hkv, G, S, D).
+    """
+    B, Hkv, G, S, D = q.shape
+    P, ps, _, _ = k_pages.shape
+    NP = table.shape[1]
+    grid_spec_cls = pallas_prefetch_grid_spec()
+    assert grid_spec_cls is not None, (
+        "paged decode kernel needs scalar-prefetch grid specs; gate calls on "
+        "ops.paged_decode_supported()")
+    kernel = functools.partial(
+        _flash_decode_paged_kernel, scale=1.0 / math.sqrt(D), causal=causal,
+        window=window, softcap=softcap, n_kv=NP)
+    grid_spec = grid_spec_cls(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, NP),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda b, h, j, tab: (b, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, j, tab: (b, j)),
+            pl.BlockSpec((1, 1, G, S, D), lambda b, h, j, tab: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, ps, 1, D), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1, D), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, S, D), lambda b, h, j, tab: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, G, S), lambda b, h, j, tab: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pallas_vmem_scratch((G, S), jnp.float32),
+            pallas_vmem_scratch((G, S), jnp.float32),
+            pallas_vmem_scratch((G, S, D), jnp.float32),
+        ],
+    )
+    out, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, q_positions, kv_positions, q, k_pages, v_pages)
+    return out
+
+
+def _flash_decode_paged_quant_kernel(tab_ref, qp_ref, kp_ref, q_ref, kq_ref,
+                                     ks_ref, vq_ref, vs_ref, o_ref, lse_ref,
+                                     m_ref, l_ref, acc_ref, *, scale: float,
+                                     causal: bool, window: int,
+                                     softcap: float, n_kv: int,
+                                     head_dim: int):
+    del tab_ref  # consumed by the BlockSpec index maps (scalar prefetch)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        _tile_init(m_ref, l_ref, acc_ref)
+
+    kp = kp_ref[0]
+
+    @pl.when(jnp.max(kp) >= 0)          # skip dead pages (trash / unwritten)
+    def _update():
+        k = _dequant_rows(kq_ref[0, :, 0], ks_ref[0, :, 0], head_dim)
+        v = _dequant_rows(vq_ref[0, :, 0], vs_ref[0, :, 0], head_dim)
+        _tile_update(q_ref[0, 0].astype(jnp.float32), k, v,
+                     qp_ref[0], kp, m_ref, l_ref, acc_ref,
+                     scale=scale, causal=causal, window=window,
+                     softcap=softcap)
+
+    @pl.when(ki == n_kv - 1)
+    def _finalize():
+        _tile_finalize(o_ref, lse_ref, m_ref, l_ref, acc_ref)
+
+
+def flash_decode_paged_quant_fwd(q: jax.Array, k_codes: jax.Array,
+                                 k_scale: jax.Array, v_codes: jax.Array,
+                                 v_scale: jax.Array, table: jax.Array,
+                                 q_positions: jax.Array,
+                                 kv_positions: jax.Array, *,
+                                 causal: bool = True, window: int = 0,
+                                 softcap: float = 0.0,
+                                 interpret: bool = True) -> jax.Array:
+    """Paged decode kernel over Proteus-quantized pages: int8 / nibble-packed
+    int4 code pages + per-row fp32 scale pages, dequantized per page in VMEM
+    — the narrow-code HBM saving and the paged allocation saving compose.
+
+    q: (B, Hkv, G, S, D)   code pools: (P, ps, Hkv, Dc) int8
+    scale pools: (P, ps, Hkv) fp32   table: (B, NP) int32
+    q_positions: (B, S)   kv_positions: (B, NP * ps)
+    Returns out (B, Hkv, G, S, D).
+    """
+    B, Hkv, G, S, D = q.shape
+    P, ps, _, Dc = k_codes.shape
+    NP = table.shape[1]
+    grid_spec_cls = pallas_prefetch_grid_spec()
+    assert grid_spec_cls is not None, (
+        "paged decode kernel needs scalar-prefetch grid specs; gate calls on "
+        "ops.paged_decode_supported()")
+    kernel = functools.partial(
+        _flash_decode_paged_quant_kernel, scale=1.0 / math.sqrt(D),
+        causal=causal, window=window, softcap=softcap, n_kv=NP, head_dim=D)
+    grid_spec = grid_spec_cls(
+        num_scalar_prefetch=1,
+        grid=(B, Hkv, NP),
+        in_specs=[
+            pl.BlockSpec((1, S), lambda b, h, j, tab: (b, 0)),
+            pl.BlockSpec((1, ps), lambda b, h, j, tab: (b, j)),
+            pl.BlockSpec((1, 1, G, S, D), lambda b, h, j, tab: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, ps, 1, Dc), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1), lambda b, h, j, tab: (tab[b, j], 0, h)),
+            pl.BlockSpec((1, ps, 1, Dc), lambda b, h, j, tab: (tab[b, j], 0, h, 0)),
+            pl.BlockSpec((1, ps, 1), lambda b, h, j, tab: (tab[b, j], 0, h)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, G, S, D), lambda b, h, j, tab: (b, h, 0, 0, 0)),
+            pl.BlockSpec((1, 1, G, S), lambda b, h, j, tab: (b, h, 0, 0)),
+        ],
+        scratch_shapes=[
+            pallas_vmem_scratch((G, S), jnp.float32),
+            pallas_vmem_scratch((G, S), jnp.float32),
+            pallas_vmem_scratch((G, S, D), jnp.float32),
+        ],
+    )
+    out, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((B, Hkv, G, S, D), q.dtype),
+            jax.ShapeDtypeStruct((B, Hkv, G, S), jnp.float32),
+        ],
+        interpret=interpret,
+    )(table, q_positions, kv_positions, q, k_codes, k_scale, v_codes, v_scale)
     return out
 
 

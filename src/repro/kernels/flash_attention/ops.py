@@ -14,14 +14,19 @@ from typing import Optional, Tuple
 import jax
 import jax.numpy as jnp
 
+from repro.compat import pallas_prefetch_grid_spec
 from repro.kernels.common import pad_axis, pad_positions, use_interpret
 from repro.kernels.flash_attention.kernel import (flash_attention_bh,
                                                  flash_attention_fwd,
                                                  flash_decode_fwd,
+                                                 flash_decode_paged_fwd,
+                                                 flash_decode_paged_quant_fwd,
                                                  flash_decode_quant_fwd)
 
 __all__ = ["flash_attention", "flash_attention_gqa_fwd", "flash_decode",
-           "flash_decode_quant", "flash_attention_bh"]
+           "flash_decode_quant", "flash_decode_paged",
+           "flash_decode_paged_quant", "paged_decode_supported",
+           "flash_attention_bh"]
 
 
 def _default_positions(B: int, n: int) -> jax.Array:
@@ -105,6 +110,71 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
         pad_positions(kv_positions.astype(jnp.int32), Tp),
         causal=causal, window=window, softcap=softcap, block_k=bk,
         interpret=interpret)
+    return out5.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
+
+
+def paged_decode_supported() -> bool:
+    """Whether the paged decode kernels can run on this JAX install.
+
+    The paged kernels resolve the page table inside BlockSpec index maps via
+    scalar prefetch, which needs ``pltpu.PrefetchScalarGridSpec`` (absent on
+    CPU-only builds without the TPU pallas module). Callers fall back to
+    ``paged_gather`` + the dense path when this is False.
+    """
+    return pallas_prefetch_grid_spec() is not None
+
+
+def flash_decode_paged(q: jax.Array, k_pages: jax.Array, v_pages: jax.Array,
+                       table: jax.Array, q_positions: jax.Array,
+                       kv_positions: jax.Array, *, causal: bool = True,
+                       window: int = 0, softcap: float = 0.0,
+                       interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-step attention against a paged (block-table) KV cache.
+
+    q: (B, S, Hq, D) with small S; k/v_pages: (P, ps, Hkv, D) shared page
+    pool in storage layout (physical page 0 is the trash page); table:
+    (B, NP) int32 mapping each slot's logical pages to pool rows;
+    q_positions: (B, S); kv_positions: (B, NP * ps) per-slot positions
+    (-1 = empty — ring layout, valid length, and dead pages all live here).
+    The kernel streams only the pages each slot owns; no dense gather.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    B, S, Hq, D = q.shape
+    Hkv = k_pages.shape[2]
+    G = Hq // Hkv
+    q5 = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    out5 = flash_decode_paged_fwd(
+        q5, k_pages, v_pages, table.astype(jnp.int32),
+        q_positions.astype(jnp.int32), kv_positions.astype(jnp.int32),
+        causal=causal, window=window, softcap=softcap, interpret=interpret)
+    return out5.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
+
+
+def flash_decode_paged_quant(q: jax.Array, k_codes: jax.Array,
+                             k_scale: jax.Array, v_codes: jax.Array,
+                             v_scale: jax.Array, table: jax.Array,
+                             q_positions: jax.Array,
+                             kv_positions: jax.Array, *, causal: bool = True,
+                             window: int = 0, softcap: float = 0.0,
+                             interpret: Optional[bool] = None) -> jax.Array:
+    """Decode-step attention against a Proteus-quantized paged KV cache.
+
+    q: (B, S, Hq, D); code pools: (P, ps, Hkv, Dc) int8 (Dc = D, or D//2
+    when nibble-packed int4); scale pools: (P, ps, Hkv) fp32; table /
+    positions as in :func:`flash_decode_paged`. Dequantization happens per
+    page in VMEM, so the quantized-HBM and paged-allocation savings compose.
+    """
+    if interpret is None:
+        interpret = use_interpret()
+    B, S, Hq, D = q.shape
+    Hkv = k_codes.shape[2]
+    G = Hq // Hkv
+    q5 = q.reshape(B, S, Hkv, G, D).transpose(0, 2, 3, 1, 4)
+    out5 = flash_decode_paged_quant_fwd(
+        q5, k_codes, k_scale, v_codes, v_scale, table.astype(jnp.int32),
+        q_positions.astype(jnp.int32), kv_positions.astype(jnp.int32),
+        causal=causal, window=window, softcap=softcap, interpret=interpret)
     return out5.transpose(0, 3, 1, 2, 4).reshape(B, S, Hq, D)
 
 

@@ -9,6 +9,16 @@ sequences are swapped out and queued prompts are prefilled into the freed
 slots. Every per-slot state (``pos``, ``pos_ids``, KV rows) is independent,
 so sequences at different depths coexist in one cache.
 
+With ``REPRO_KV_PAGES=<n>`` the KV cache is *paged*: fixed-size pages live in
+one shared pool per leaf and each slot holds an int32 page table. A host-side
+free-list allocator hands out pool rows on prefill and reclaims them on
+retirement, so HBM committed to KV scales with tokens actually held, not with
+``slots * max_len`` (the statically over-allocated layout the paper's MIMDRAM
+line attacks in DRAM). Full prefill pages are hash-consed across slots
+(prefix sharing, refcounted, copy-on-write before any divergent write), and
+physical page 0 is a reserved trash page: retired slots point there, so their
+stale in-flight decode writes land harmlessly.
+
 All device programs have static shapes (slots x prompt_len x max_len x
 chunk), so after the first chunk per shape everything is a compile-cache hit.
 
@@ -19,7 +29,7 @@ from __future__ import annotations
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional
+from typing import Any, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -27,14 +37,17 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 from repro.core.mimdram import Plan
+from repro.kernels.common import kv_page_size
 from repro.launch import specs as specs_lib
 from repro.launch.steps import make_serving_jits
+from repro.models.layers import PagedKVCache, QKVCache
 
 
 @dataclass
 class Request:
-    """One generation request. ``tokens``: 1-D int32 prompt (longer prompts
-    are truncated to the engine's prompt_len bucket, shorter are left-padded).
+    """One generation request. ``tokens``: 1-D int32 prompt; prompts longer
+    than the engine's prompt bucket are rejected with an ``error`` completion
+    (never silently truncated), shorter ones are padded to the bucket.
     ``extras``: additional prefill inputs (e.g. ``patch_embeds``) shaped for
     batch=1 at the engine's prompt length."""
 
@@ -48,13 +61,71 @@ class Request:
 class Completion:
     uid: int
     tokens: np.ndarray            # generated token ids (1-D)
-    finish_reason: str            # "length" | "eos"
+    finish_reason: str            # "length" | "eos" | "error"
+    error: Optional[str] = None   # set when finish_reason == "error"
 
 
 @dataclass
 class _Slot:
     request: Request
     produced: List[int] = field(default_factory=list)
+    n: int = 0                    # true prompt length (paged mode)
+    cap: int = 0                  # per-request generation cap
+    chunks: int = 0               # decode chunks dispatched since insert
+
+
+class PromptTooLongError(ValueError):
+    """Prompt exceeds the engine's prompt bucket (no silent truncation)."""
+
+
+class _PageAllocator:
+    """Host-side free-list allocator over the physical page pool.
+
+    Pool row 0 is the trash page and is never handed out. ``refs`` counts how
+    many slot-table entries point at each physical page; ``registry`` is the
+    hash-cons map for prefix sharing: (logical page index, prefix-token
+    bytes) -> physical page. Registered pages are freed (and unregistered)
+    when their last reference drops — sharing is across *concurrent* slots.
+    """
+
+    def __init__(self, n_phys: int):
+        self.n_phys = n_phys
+        self.free: List[int] = list(range(n_phys - 1, 0, -1))
+        self.refs = np.zeros(n_phys, np.int32)
+        self.registry: Dict[Tuple[int, bytes], int] = {}
+        self.reg_key: Dict[int, Tuple[int, bytes]] = {}
+        self.hits = 0
+
+    def alloc(self) -> int:
+        phys = self.free.pop()
+        self.refs[phys] = 1
+        return phys
+
+    def lookup(self, key: Tuple[int, bytes]) -> Optional[int]:
+        phys = self.registry.get(key)
+        if phys is not None:
+            self.refs[phys] += 1
+            self.hits += 1
+        return phys
+
+    def register(self, phys: int, key: Tuple[int, bytes]) -> None:
+        self.registry[key] = phys
+        self.reg_key[phys] = key
+
+    def unregister(self, phys: int) -> None:
+        key = self.reg_key.pop(phys, None)
+        if key is not None:
+            self.registry.pop(key, None)
+
+    def decref(self, phys: int) -> None:
+        self.refs[phys] -= 1
+        if self.refs[phys] == 0:
+            self.unregister(phys)
+            self.free.append(phys)
+
+    @property
+    def used(self) -> int:
+        return int((self.refs > 0).sum())
 
 
 class ServeEngine:
@@ -62,7 +133,9 @@ class ServeEngine:
 
     Args:
       slots: number of concurrently decoded sequences (cache batch dim).
-      prompt_len: prompt bucket; prompts are left-padded/truncated to this.
+      prompt_len: prompt bucket; prompts are padded to this (left-padded in
+        the contiguous layout, right-padded with true-length tracking in the
+        paged layout) and rejected when longer.
       max_new: per-request generation cap (and cache sizing: max_len defaults
         to prompt_len + max_new).
       chunk: decode tokens per dispatch (the fused scan length).
@@ -80,32 +153,68 @@ class ServeEngine:
         self.max_len = max_len or (prompt_len + max_new)
         assert self.max_len >= prompt_len + 1
 
-        self._prefill, self._generate, rep, cache_sh = make_serving_jits(
-            model, plan, max_len=self.max_len, chunk=chunk,
-            temperature=temperature, top_k=top_k)
-
         # big cache = batch-1 prefill cache zeros, tiled to `slots` rows
         shape1 = ShapeConfig("engine_prefill", seq_len=prompt_len,
                              global_batch=1, mode="prefill")
         small = specs_lib.prefill_cache_specs(model, model.cfg, shape1,
                                               self.max_len)
+        paged_leaves = [l for l in jax.tree_util.tree_leaves(
+            small, is_leaf=lambda x: isinstance(x, PagedKVCache))
+            if isinstance(l, PagedKVCache)]
+        self.paged = kv_page_size() > 0 and bool(paged_leaves)
+        if self.paged:
+            self.page_size = paged_leaves[0].page_size
+            self.n_logical_pages = paged_leaves[0].table.shape[-1]
+            self.cache_pos_len = self.page_size * self.n_logical_pages
+            assert all(l.page_size == self.page_size
+                       and l.table.shape[-1] == self.n_logical_pages
+                       for l in paged_leaves), (
+                "paged engine needs one shared (page_size, n_pages) across "
+                "all paged cache leaves")
+
+        self._prefill, self._generate, rep, cache_sh = make_serving_jits(
+            model, plan, max_len=self.max_len, chunk=chunk,
+            temperature=temperature, top_k=top_k, full_logits=self.paged)
         # family-aware prefill inputs: vlm reserves a patch prefix inside the
         # prompt bucket (shorter token field), audio needs src_embeds, etc.
         self._batch_template = specs_lib.input_specs(model.cfg, shape1)
         self._tok_len = self._batch_template["tokens"].shape[1]
+        self._prefix_len = (self.prompt_len - self._tok_len
+                            if model.cfg.family == "vlm" else 0)
         axes = model.cache_logical_axes()
-        # -1 = no batch axis (leaf shared across slots; None breaks tree_map)
+        # -1 = no batch axis (leaf shared across slots; None breaks tree_map);
+        # the string "paged" marks whole PagedKVCache leaves, which get pool
+        # scatters + table-row writes instead of batch-row slicing.
+        is_node = lambda x: isinstance(x, (tuple, PagedKVCache))
         self._batch_axis = jax.tree_util.tree_map(
-            lambda ax: ax.index("act_batch") if "act_batch" in ax else -1,
-            axes, is_leaf=lambda x: isinstance(x, tuple))
+            lambda ax: "paged" if isinstance(ax, PagedKVCache)
+            else (ax.index("act_batch") if "act_batch" in ax else -1),
+            axes, is_leaf=is_node)
+        is_marked = lambda x: isinstance(x, (tuple, str)) or (
+            isinstance(x, int) and not isinstance(x, bool))
 
         def tile(ax, sd):
+            if isinstance(ax, str):          # paged: widen pool, zero tables
+                n_phys = slots * self.n_logical_pages + 1
+
+                def z(s, nd):
+                    shp = list(s.shape)
+                    shp[len(shp) - nd] = n_phys
+                    return jnp.zeros(tuple(shp), s.dtype)
+
+                pages = (QKVCache(z(sd.pages.codes, 4), z(sd.pages.scale, 3))
+                         if isinstance(sd.pages, QKVCache)
+                         else z(sd.pages, 4))
+                tshp = list(sd.table.shape)
+                tshp[-2] = slots
+                return PagedKVCache(pages, jnp.zeros(tuple(tshp), jnp.int32))
             shp = list(sd.shape)
             if ax >= 0:
                 shp[ax] = slots
             return jnp.zeros(tuple(shp), sd.dtype)
 
-        self.cache = jax.tree_util.tree_map(tile, self._batch_axis, small)
+        self.cache = jax.tree_util.tree_map(tile, self._batch_axis, small,
+                                            is_leaf=is_marked)
         self._tok = jnp.zeros((slots, 1), jnp.int32)
         self._key = jax.random.PRNGKey(seed)
         if rep is not None:
@@ -113,8 +222,27 @@ class ServeEngine:
             self._tok = jax.device_put(self._tok, rep)
             self._key = jax.device_put(self._key, rep)
 
-        def insert(big, tok, small_cache, first_tok, slot):
+        def pool_idx(bp, nd):
+            # page axis sits nd-from-the-end: -4 for (.., P, ps, H, D) pools
+            # and codes, -3 for (.., P, ps, H) scale pools
+            return bp.ndim - nd
+
+        def insert(big, tok, small_cache, first_tok, slot, dest_rows,
+                   table_row, pos_val):
             def put(ax, b, s):
+                if isinstance(ax, str):      # paged leaf
+                    def pp(bp, sp, nd):
+                        a = pool_idx(bp, nd)
+                        src = sp[(slice(None),) * a + (slice(1, None),)]
+                        return bp.at[(slice(None),) * a + (dest_rows,)].set(
+                            src.astype(bp.dtype))
+
+                    pages = (QKVCache(pp(b.pages.codes, s.pages.codes, 4),
+                                      pp(b.pages.scale, s.pages.scale, 3))
+                             if isinstance(b.pages, QKVCache)
+                             else pp(b.pages, s.pages, 4))
+                    table = b.table.at[..., slot, :].set(table_row)
+                    return PagedKVCache(pages, table)
                 if ax < 0:
                     return b
                 start = tuple(slot if j == ax else 0 for j in range(b.ndim))
@@ -122,12 +250,59 @@ class ServeEngine:
                     b, s.astype(b.dtype), start)
 
             big = jax.tree_util.tree_map(put, self._batch_axis, big,
-                                         small_cache)
+                                         small_cache, is_leaf=is_marked)
+            if self.paged and "pos" in big:
+                # right-padded bucket prefill: decode resumes at the true
+                # prompt end, not at the bucket length
+                big["pos"] = big["pos"].at[slot].set(pos_val)
             tok = jax.lax.dynamic_update_slice(tok, first_tok, (slot, 0))
             return big, tok
 
         self._insert = jax.jit(insert, donate_argnums=(0, 1),
                                out_shardings=(cache_sh, rep))
+
+        if self.paged:
+            def clear_slot(big, slot):
+                def cl(ax, b):
+                    if isinstance(ax, str):
+                        return PagedKVCache(
+                            b.pages, b.table.at[..., slot, :].set(0))
+                    return b
+                return jax.tree_util.tree_map(cl, self._batch_axis, big,
+                                              is_leaf=is_marked)
+
+            def cow(big, slot, logical_i, old_row, new_row):
+                def c(ax, b):
+                    if not isinstance(ax, str):
+                        return b
+
+                    def cp(bp, nd):
+                        a = pool_idx(bp, nd)
+                        row = jax.lax.dynamic_index_in_dim(
+                            bp, old_row, axis=a, keepdims=False)
+                        return bp.at[(slice(None),) * a + (new_row,)].set(row)
+
+                    pages = (QKVCache(cp(b.pages.codes, 4),
+                                      cp(b.pages.scale, 3))
+                             if isinstance(b.pages, QKVCache)
+                             else cp(b.pages, 4))
+                    return PagedKVCache(
+                        pages, b.table.at[..., slot, logical_i].set(new_row))
+                return jax.tree_util.tree_map(c, self._batch_axis, big,
+                                              is_leaf=is_marked)
+
+            self._clear_slot = jax.jit(clear_slot, donate_argnums=(0,),
+                                       out_shardings=cache_sh)
+            self._cow = jax.jit(cow, donate_argnums=(0,),
+                                out_shardings=cache_sh)
+            self._alloc = _PageAllocator(slots * self.n_logical_pages + 1)
+            self._host_table = np.zeros((slots, self.n_logical_pages),
+                                        np.int32)
+            # prefix sharing needs (a) pure-token prompts (patch/src extras
+            # are not in the hash key) and (b) a cache long enough that the
+            # bucket prefill never ring-wraps (page <-> position identity)
+            self._share_ok = (set(self._batch_template) == {"tokens"}
+                              and self.cache_pos_len >= self.prompt_len)
 
         self._queue: Deque[Request] = deque()
         self._active: Dict[int, _Slot] = {}
@@ -137,16 +312,59 @@ class ServeEngine:
         self.stats: Dict[str, Any] = {
             "decode_dispatches": 0, "prefills": 0, "tokens_out": 0,
             "wall_seconds": 0.0, "chunk_seconds": [],
+            "kv_pages_in_use": 0, "kv_pages_peak": 0, "prefix_hits": 0,
         }
+        if self.paged:
+            self._page_bytes = sum(
+                leaf.nbytes // leaf.shape[pool_idx(leaf, nd)]
+                for pl in jax.tree_util.tree_leaves(
+                    self.cache,
+                    is_leaf=lambda x: isinstance(x, PagedKVCache))
+                if isinstance(pl, PagedKVCache)
+                for leaf, nd in (
+                    [(pl.pages.codes, 4), (pl.pages.scale, 3)]
+                    if isinstance(pl.pages, QKVCache) else [(pl.pages, 4)]))
+            self.stats["kv_hbm_bytes"] = 0
+        else:
+            # contiguous baseline: KV HBM is committed statically up front
+            def _kv_bytes(ax, leaf):
+                leaves = jax.tree_util.tree_leaves(leaf)
+                flat_ax = jax.tree_util.tree_leaves(
+                    ax, is_leaf=lambda x: isinstance(x, tuple))
+                return sum(l.nbytes for l, a in zip(leaves, flat_ax)
+                           if "cache_seq" in a)
+
+            self.stats["kv_hbm_bytes"] = sum(
+                jax.tree_util.tree_leaves(jax.tree_util.tree_map(
+                    _kv_bytes, axes, self.cache,
+                    is_leaf=lambda x: isinstance(x, tuple))))
+        self.stats["kv_hbm_bytes_peak"] = self.stats["kv_hbm_bytes"]
 
     # -- queue interface -----------------------------------------------------
     def submit(self, request: Request) -> None:
         self._queue.append(request)
 
-    def _prefill_batch(self, req: Request) -> Dict[str, Any]:
+    def _prefill_batch(self, req: Request) -> Tuple[Dict[str, Any], int]:
+        """Build the bucketed batch-1 prefill batch; returns (batch, n) with
+        ``n`` the true prompt length inside the bucket (prefix + tokens).
+
+        Over-long (or empty) prompts raise :class:`PromptTooLongError` /
+        ``ValueError`` — the engine never silently truncates a prompt.
+        """
+        t = np.asarray(req.tokens, np.int32).reshape(-1)
+        if len(t) > self._tok_len:
+            raise PromptTooLongError(
+                f"request {req.uid}: prompt has {len(t)} tokens, engine "
+                f"bucket holds {self._tok_len} (submit shorter prompts or "
+                "build the engine with a larger prompt_len)")
+        n = self._prefix_len + len(t)
+        if n < 1:
+            raise ValueError(f"request {req.uid}: empty prompt")
         toks = np.zeros((1, self._tok_len), np.int32)
-        t = np.asarray(req.tokens, np.int32)[-self._tok_len:]
-        toks[0, self._tok_len - len(t):] = t
+        if self.paged:
+            toks[0, :len(t)] = t          # right-pad; decode overwrites pads
+        else:
+            toks[0, self._tok_len - len(t):] = t
         batch: Dict[str, Any] = {"tokens": jnp.asarray(toks)}
         if req.extras:
             batch.update({k: jnp.asarray(v) for k, v in req.extras.items()})
@@ -159,21 +377,107 @@ class ServeEngine:
                 raise ValueError(
                     f"request {req.uid}: input {k!r} has shape "
                     f"{tuple(batch[k].shape)}, engine bucket needs {sd.shape}")
-        return batch
+        return batch, n
+
+    def _plan_pages(self, slot: int, toks: np.ndarray, n: int,
+                    cap: int) -> Tuple[np.ndarray, np.ndarray]:
+        """Allocate this slot's logical pages; returns (dest_rows, table_row).
+
+        Pages are claimed up front for every position the slot can touch —
+        the prefill bucket plus ``cap`` decode steps plus within-chunk
+        overrun — so decode never needs to grow the table. ``dest_rows`` is
+        where the prefill insert scatters each small-cache page: the slot's
+        own pool row, or the trash page (0) for pages resolved by prefix
+        sharing (their content already exists) and for unallocated tails.
+        """
+        ps, NP, T = self.page_size, self.n_logical_pages, self.cache_pos_len
+        # positions beyond maxp hold only prefill pad rows, which decode never
+        # writes and always reads causally masked: their pages stay on trash
+        maxp = n + cap - 1 + self.chunk       # one past the last writable pos
+        n_alloc = min(-(-min(maxp, T) // ps), NP)
+        dest = np.zeros(NP, np.int32)
+        trow = np.zeros(NP, np.int32)
+        for i in range(n_alloc):
+            key = ((i, toks[:(i + 1) * ps].tobytes())
+                   if self._share_ok and (i + 1) * ps <= n else None)
+            phys = self._alloc.lookup(key) if key is not None else None
+            if phys is None:
+                phys = self._alloc.alloc()
+                if key is not None:
+                    self._alloc.register(phys, key)
+                dest[i] = phys               # owned: prefill writes the page
+            trow[i] = phys
+        self._host_table[slot] = trow
+        return dest, trow
+
+    def _refresh_page_stats(self) -> None:
+        used = self._alloc.used
+        self.stats["kv_pages_in_use"] = used
+        self.stats["kv_pages_peak"] = max(self.stats["kv_pages_peak"], used)
+        self.stats["kv_hbm_bytes"] = used * self._page_bytes
+        self.stats["kv_hbm_bytes_peak"] = max(
+            self.stats["kv_hbm_bytes_peak"], self.stats["kv_hbm_bytes"])
+        self.stats["prefix_hits"] = self._alloc.hits
 
     def _admit(self) -> None:
         while self._free and self._queue:
             req = self._queue.popleft()
             # build+validate the batch BEFORE claiming a slot: a malformed
-            # request raises to the caller without leaking concurrency
-            batch = self._prefill_batch(req)
+            # request raises to the caller without leaking concurrency —
+            # except over-long/empty prompts, which retire with an explicit
+            # error completion so queue draining survives bad inputs
+            try:
+                batch, n = self._prefill_batch(req)
+            except (PromptTooLongError, ValueError) as e:
+                self.completions.append(Completion(
+                    uid=req.uid, tokens=np.zeros((0,), np.int32),
+                    finish_reason="error", error=str(e)))
+                continue
             slot = self._free.pop()
             logits, small = self._prefill(self.params, batch)
-            first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-            self.cache, self._tok = self._insert(
-                self.cache, self._tok, small, first, jnp.int32(slot))
-            self._active[slot] = _Slot(request=req)
+            if self.paged:
+                cap = min(req.max_new_tokens, self.max_len - n)
+                first = jnp.argmax(logits[:, n - 1]).reshape(1, 1)
+                dest, trow = self._plan_pages(
+                    slot, np.asarray(req.tokens, np.int32).reshape(-1), n, cap)
+                self.cache, self._tok = self._insert(
+                    self.cache, self._tok, small, first.astype(jnp.int32),
+                    jnp.int32(slot), jnp.asarray(dest), jnp.asarray(trow),
+                    jnp.int32(n))
+                self._active[slot] = _Slot(request=req, n=n, cap=cap)
+                self._refresh_page_stats()
+            else:
+                cap = min(req.max_new_tokens, self.max_len - self.prompt_len)
+                first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+                self.cache, self._tok = self._insert(
+                    self.cache, self._tok, small, first, jnp.int32(slot),
+                    jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                    jnp.int32(0))
+                self._active[slot] = _Slot(request=req, cap=cap)
             self.stats["prefills"] += 1
+
+    def _ensure_writable(self) -> None:
+        """Copy-on-write pass before a decode chunk: any page the chunk may
+        write that is shared (refs > 1) gets copied to a fresh pool row, and
+        sole-owned pages still in the prefix registry are unregistered —
+        the first divergent write never lands on another slot's prefix."""
+        ps, T = self.page_size, self.cache_pos_len
+        for slot, st in self._active.items():
+            pos0 = st.n + st.chunks * self.chunk
+            pages = {(p % T) // ps for p in range(pos0, pos0 + self.chunk)}
+            for i in sorted(pages):
+                phys = int(self._host_table[slot, i])
+                if phys == 0:
+                    continue                  # unallocated tail -> trash sink
+                if self._alloc.refs[phys] > 1:
+                    new = self._alloc.alloc()
+                    self.cache = self._cow(
+                        self.cache, jnp.int32(slot), jnp.int32(i),
+                        jnp.int32(phys), jnp.int32(new))
+                    self._alloc.refs[phys] -= 1
+                    self._host_table[slot, i] = new
+                elif phys in self._alloc.reg_key:
+                    self._alloc.unregister(phys)
 
     def step(self) -> bool:
         """Admit waiting requests, run one fused decode chunk, retire finished
@@ -184,7 +488,10 @@ class ServeEngine:
         is a per-slot slice — no host-side scan over the token buffer."""
         self._admit()
         if not self._active:
-            return False
+            return bool(self._queue)
+        if self.paged:
+            self._ensure_writable()
+            self._refresh_page_stats()
         t0 = time.perf_counter()
         eos = jnp.int32(-1 if self.eos_id is None else self.eos_id)
         (self.cache, self._tok, self._key, done, n_valid,
@@ -197,19 +504,28 @@ class ServeEngine:
         self.stats["decode_dispatches"] += 1
         for slot in list(self._active):
             st = self._active[slot]
-            cap = min(st.request.max_new_tokens,
-                      self.max_len - self.prompt_len)
-            take = min(int(n_np[slot]), cap - len(st.produced))
+            st.chunks += 1
+            take = min(int(n_np[slot]), st.cap - len(st.produced))
             st.produced.extend(int(t) for t in toks_np[slot][:take])
             if bool(done_np[slot]) and take == int(n_np[slot]):
                 self._retire(slot, "eos")
-            elif len(st.produced) >= cap:
+            elif len(st.produced) >= st.cap:
                 self._retire(slot, "length")
         return bool(self._active or self._queue)
 
     def _retire(self, slot: int, reason: str) -> None:
         st = self._active.pop(slot)
         self._free.append(slot)
+        if self.paged:
+            for phys in self._host_table[slot]:
+                if phys:
+                    self._alloc.decref(int(phys))
+            self._host_table[slot] = 0
+            # device table -> trash page: the retired slot keeps riding the
+            # fused decode until reused, and its stale writes must not land
+            # in pages the allocator may hand to someone else
+            self.cache = self._clear_slot(self.cache, jnp.int32(slot))
+            self._refresh_page_stats()
         self.stats["tokens_out"] += len(st.produced)
         self.completions.append(Completion(
             uid=st.request.uid, tokens=np.asarray(st.produced, np.int32),
@@ -228,6 +544,8 @@ class ServeEngine:
             self.stats["wall_seconds"], 1e-9)
         self.stats["dispatches_per_token"] = (
             self.stats["decode_dispatches"] / max(self.stats["tokens_out"], 1))
+        self.stats["kv_bytes_per_token"] = (
+            self.stats["kv_hbm_bytes_peak"] / max(self.stats["tokens_out"], 1))
         return self.completions
 
     def compile_cache_size(self) -> Optional[int]:

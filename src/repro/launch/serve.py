@@ -145,10 +145,12 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
 def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
                 requests: int = 10, prompt_len: int = 32, gen: int = 16,
                 chunk: int = 8, seed: int = 0, temperature: float = 0.0,
-                top_k: int = 0) -> ServeEngine:
+                top_k: int = 0, shared_prefix: int = 0) -> ServeEngine:
     """Continuous batching: drain a queue of mixed-length synthetic requests
     through a :class:`ServeEngine`; returns the drained engine (stats +
-    completions)."""
+    completions). ``shared_prefix > 0`` gives every request the same first
+    tokens (a common system prompt) — with the paged cache, concurrent slots
+    then hash-cons their full prefix pages instead of duplicating them."""
     cfg = get_config(arch, smoke=smoke)
     mesh = mesh_lib.make_local_mesh(("data",))
     plan = plan_sharding(
@@ -160,11 +162,16 @@ def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
                       max_new=gen, chunk=chunk, temperature=temperature,
                       top_k=top_k, seed=seed)
     rng = np.random.default_rng(seed)
-    reqs = [Request(uid=i,
-                    tokens=rng.integers(1, cfg.vocab_size,
-                                        rng.integers(4, prompt_len + 1)),
-                    max_new_tokens=int(rng.integers(max(gen // 2, 1), gen + 1)))
-            for i in range(requests)]
+    prefix = rng.integers(1, cfg.vocab_size, shared_prefix).astype(np.int32)
+    reqs = []
+    for i in range(requests):
+        toks = rng.integers(1, cfg.vocab_size,
+                            rng.integers(max(4, shared_prefix + 1),
+                                         prompt_len + 1)).astype(np.int32)
+        toks[:shared_prefix] = prefix
+        reqs.append(Request(
+            uid=i, tokens=toks,
+            max_new_tokens=int(rng.integers(max(gen // 2, 1), gen + 1))))
     eng.run(reqs)
     return eng
 
@@ -190,22 +197,37 @@ def main() -> None:
                     choices=["off", "int8", "int4", "auto"],
                     help="Proteus-quantized KV cache for the decode hot path "
                     "(sets REPRO_KV_QUANT before programs are traced)")
+    ap.add_argument("--kv-page-size", type=int, default=None,
+                    help="paged KV cache with this many tokens per page "
+                    "(sets REPRO_KV_PAGES before programs are traced; "
+                    "0 = contiguous per-slot cache)")
+    ap.add_argument("--shared-prefix", type=int, default=0,
+                    help="queue mode: give every request the same first N "
+                    "tokens (exercises paged prefix sharing)")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
     if args.attn_impl:
         os.environ["REPRO_ATTN_IMPL"] = args.attn_impl
     if args.kv_quant:
         os.environ["REPRO_KV_QUANT"] = args.kv_quant
+    if args.kv_page_size is not None:
+        os.environ["REPRO_KV_PAGES"] = str(args.kv_page_size)
     if args.mode == "queue":
         eng = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
                           requests=args.requests, prompt_len=args.prompt_len,
                           gen=args.gen, chunk=args.chunk,
-                          temperature=args.temperature, top_k=args.top_k)
+                          temperature=args.temperature, top_k=args.top_k,
+                          shared_prefix=args.shared_prefix)
         s = eng.stats
         print(f"{len(eng.completions)} requests, {s['tokens_out']} tokens in "
               f"{s['wall_seconds']:.2f}s ({s['tokens_per_second']:.1f} tok/s, "
               f"{s['dispatches_per_token']:.3f} dispatches/token, "
               f"{s['prefills']} prefills)")
+        print(f"kv: {s['kv_hbm_bytes_peak'] / 1e6:.2f} MB peak "
+              f"({s['kv_bytes_per_token']:.0f} B/token"
+              + (f", {s['kv_pages_peak']} pages peak, "
+                 f"{s['prefix_hits']} prefix hits" if eng.paged else "")
+              + ")")
         return
     out = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen, chunk=args.chunk,

@@ -163,14 +163,18 @@ def make_train_step_proteus(model, optimizer: Optimizer, plan: Plan,
 # ---------------------------------------------------------------------------
 # Serve
 # ---------------------------------------------------------------------------
-def make_prefill_step(model, plan: Plan, max_len: Optional[int] = None):
+def make_prefill_step(model, plan: Plan, max_len: Optional[int] = None,
+                      full_logits: bool = False):
     """Prefill step; with ``max_len`` the returned cache is pre-sized for
-    ``max_len`` total positions (no repad before decode)."""
+    ``max_len`` total positions (no repad before decode). ``full_logits``
+    returns logits for every position — the paged engine right-pads prompts
+    to its bucket and reads the logits at each true prompt end."""
     def prefill_step(params, batch):
         with use_plan(plan):
             if max_len is None:
                 return model.prefill(params, batch)
-            return model.prefill(params, batch, max_len=max_len)
+            return model.prefill(params, batch, max_len=max_len,
+                                 full_logits=full_logits)
     return prefill_step
 
 
@@ -198,7 +202,8 @@ def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float = 0.0,
 
 
 def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
-                      temperature: float = 0.0, top_k: int = 0):
+                      temperature: float = 0.0, top_k: int = 0,
+                      full_logits: bool = False):
     """Sharding-pinned (prefill, generate, rep, cache_sh) for one serving cell.
 
     Cache (and fed-back token/key) shardings are pinned identically on both
@@ -211,7 +216,8 @@ def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
         cache_sh = named(plan, specs_lib.cache_pspecs(model, plan))
     else:
         rep = cache_sh = None
-    prefill = jax.jit(make_prefill_step(model, plan, max_len=max_len),
+    prefill = jax.jit(make_prefill_step(model, plan, max_len=max_len,
+                                        full_logits=full_logits),
                       out_shardings=(None, cache_sh))
     generate = jax.jit(
         make_generate_step(model, plan, chunk=chunk, temperature=temperature,

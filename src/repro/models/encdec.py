@@ -16,8 +16,9 @@ from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
-from repro.models.layers import (chunked_attention, dense, gated_mlp,
-                                 kv_cache_axes, kv_cache_init, kv_cache_len,
+from repro.models.layers import (aligned_cache_len, chunked_attention, dense,
+                                 gated_mlp, kv_cache_axes, kv_cache_init,
+                                 kv_cache_len, kv_cache_store,
                                  kv_cache_update, kv_cast, maybe_kv_quantize,
                                  rms_norm, rope, softmax_xent)
 from repro.models.model import attn_param_specs, mlp_param_specs, qkv
@@ -141,22 +142,27 @@ class EncDecLM:
         L = cfg.num_layers
         dh = cfg.resolved_head_dim
         src = int(max_len * cfg.src_len_ratio)
-        kv = (batch, max_len, cfg.num_kv_heads, dh)
+        # cross kv is read-only after prefill and never grows: it stays in
+        # the contiguous layout (page_size=0) even when the growing self
+        # cache is paged.
+        kv = (batch, aligned_cache_len(max_len), cfg.num_kv_heads, dh)
         xkv = (batch, src, cfg.num_kv_heads, dh)
         return {
             "k": kv_cache_init((L,) + kv, self.cdtype),
             "v": kv_cache_init((L,) + kv, self.cdtype),
-            "xk": kv_cache_init((L,) + xkv, self.cdtype),
-            "xv": kv_cache_init((L,) + xkv, self.cdtype),
+            "xk": kv_cache_init((L,) + xkv, self.cdtype, page_size=0),
+            "xv": kv_cache_init((L,) + xkv, self.cdtype, page_size=0),
             "pos": jnp.zeros((batch,), jnp.int32),
         }
 
     def cache_logical_axes(self):
-        kv = kv_cache_axes(
-            ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd"))
-        return {"k": kv, "v": kv, "xk": kv, "xv": kv, "pos": ("act_batch",)}
+        axes = ("layers", "act_batch", "cache_seq", "cache_kv", "cache_hd")
+        return {"k": kv_cache_axes(axes), "v": kv_cache_axes(axes),
+                "xk": kv_cache_axes(axes, page_size=0),
+                "xv": kv_cache_axes(axes, page_size=0),
+                "pos": ("act_batch",)}
 
-    def prefill(self, params, batch, max_len=None):
+    def prefill(self, params, batch, max_len=None, full_logits=False):
         """Encode source + run decoder over the token prefix, build caches.
 
         With ``max_len`` the self-attention cache is pre-sized to ``max_len``
@@ -168,15 +174,13 @@ class EncDecLM:
         enc_out = self.encode(params, batch["src_embeds"])
         tokens = batch["tokens"]
         B, S = tokens.shape
-        T = max(max_len or S, S)
+        T = aligned_cache_len(max(max_len or S, S))
         x = params["embed"].astype(self.cdtype)[tokens]
         positions = jnp.arange(S, dtype=jnp.int32)
 
         def store(k):
-            kk = k.astype(self.cdtype)
-            if T > S:
-                kk = jnp.pad(kk, ((0, 0), (0, T - S), (0, 0), (0, 0)))
-            return maybe_kv_quantize(kk)
+            # S <= T, so the ring store is exactly pad-to-T (shift 0)
+            return kv_cache_store(k.astype(self.cdtype), S, T)
 
         def body(carry, p):
             h = carry
@@ -200,7 +204,8 @@ class EncDecLM:
 
         x, (ck, cv, cxk, cxv) = jax.lax.scan(body, x, params["dec_blocks"])
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = dense(x[:, -1:], params["head"], "bsd,dv->bsv")
+        logits = dense(x if full_logits else x[:, -1:], params["head"],
+                       "bsd,dv->bsv")
         cache = {"k": ck, "v": cv, "xk": cxk, "xv": cxv,
                  "pos": jnp.full((B,), S, jnp.int32)}
         return logits, cache

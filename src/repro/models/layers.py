@@ -32,11 +32,15 @@ import jax.numpy as jnp
 
 from repro.core.mimdram import constrain
 from repro.core.proteus import required_bits_float
-from repro.kernels.common import (attn_impl, kv_quant_mode, pack_int4,
-                                  pad_axis, pad_positions, unpack_int4)
+from repro.kernels.common import (attn_impl, kv_page_size, kv_quant_mode,
+                                  pack_int4, pad_axis, pad_positions,
+                                  unpack_int4)
 from repro.kernels.flash_attention.ops import (flash_attention_gqa_fwd,
                                                flash_decode,
-                                               flash_decode_quant)
+                                               flash_decode_paged,
+                                               flash_decode_paged_quant,
+                                               flash_decode_quant,
+                                               paged_decode_supported)
 
 # Pallas decode kernel: the whole (G, S) query block stays VMEM-resident
 # across the kv stream, so the positional path only routes to it while the
@@ -235,11 +239,141 @@ def maybe_kv_quantize(x: jax.Array, mode: Optional[str] = None):
     return x if mode == "off" else kv_quantize(x, mode)
 
 
-def kv_cache_init(shape: Tuple[int, ...], dtype,
-                  mode: Optional[str] = None):
-    """Zeros KV-cache leaf for logical shape ``(..., T, H, D)``: a plain
-    array when quantization is off, else a :class:`QKVCache`."""
+# ---------------------------------------------------------------------------
+# Paged KV cache (REPRO_KV_PAGES=<tokens-per-page>, block-table layout)
+#
+# The contiguous per-slot ring cache statically over-allocates HBM: every
+# slot owns cache_len rows whether its prompt filled them or not — the
+# "statically over-allocated resources" problem the paper's MIMDRAM line
+# solves in DRAM by allocating per-kernel. The paged layout splits the cache
+# into fixed-size pages in ONE pool array plus a per-slot int32 page table
+# (static shapes, so the fused lax.scan decode, donation and the engine's
+# slot swaps are unchanged); the serving engine pairs it with a free-list
+# allocator and hash-consed prefix sharing so only pages actually holding
+# tokens occupy distinct HBM. Physical page 0 is a reserved trash page:
+# retired/unused table rows point at it, so stale slots keep decoding
+# harmlessly and shared pages are never overwritten by a redirected write.
+# ---------------------------------------------------------------------------
+TRASH_PAGE = 0
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class PagedKVCache:
+    """Paged KV-cache leaf: ``pages`` is the pool — a plain array
+    ``(..., P, ps, H, D)`` or a :class:`QKVCache` of pooled codes+scales —
+    and ``table`` int32 ``(..., B, NP)`` maps each slot's logical page to a
+    physical pool index (0 = trash page). Leading ``...`` dims (layers /
+    groups) are shared between pool and table so ``lax.scan`` over layers
+    unstacks both together."""
+
+    pages: Any
+    table: jax.Array
+
+    def tree_flatten(self):
+        return (self.pages, self.table), ()
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(*children)
+
+    @property
+    def _pool(self) -> jax.Array:
+        return (self.pages.codes if isinstance(self.pages, QKVCache)
+                else self.pages)
+
+    @property
+    def page_size(self) -> int:
+        return self._pool.shape[-3]
+
+    @property
+    def num_pages(self) -> int:
+        """Physical pool capacity P (including the trash page)."""
+        return self._pool.shape[-4]
+
+    @property
+    def kv_len(self) -> int:
+        """Logical per-slot capacity T = NP * page_size."""
+        return self.table.shape[-1] * self.page_size
+
+    @property
+    def num_heads(self) -> int:
+        return self._pool.shape[-2]
+
+
+def aligned_cache_len(n: int, page_size: Optional[int] = None) -> int:
+    """Round a cache length up to the page multiple in paged mode (identity
+    otherwise) so per-slot capacity is a whole number of pages and the ring
+    invariant ``slot = pos % T`` maps cleanly onto logical pages."""
+    ps = kv_page_size() if page_size is None else page_size
+    return n if ps <= 0 else -(-n // ps) * ps
+
+
+def _identity_table(batch: int, n_pages: int, lead: Tuple[int, ...] = ()):
+    """Default table: slot b's logical page i -> physical page 1 + b*NP + i
+    (page 0 stays the trash page) — standalone decode and spec dryruns work
+    without an allocator."""
+    t = (1 + jnp.arange(batch * n_pages, dtype=jnp.int32)).reshape(
+        batch, n_pages)
+    return jnp.broadcast_to(t, lead + (batch, n_pages))
+
+
+def paged_from_ring(ring, page_size: Optional[int] = None,
+                    mode: Optional[str] = None) -> "PagedKVCache":
+    """Re-layout a ring cache ``(B, T, H, D)`` as a :class:`PagedKVCache`:
+    slot b's pages land at pool rows 1 + b*NP .. with the identity table."""
+    ps = kv_page_size() if page_size is None else page_size
     mode = kv_quant_mode() if mode is None else mode
+    B, T = ring.shape[:2]
+    npg = T // ps
+    q = ring if mode == "off" else kv_quantize(ring, mode)
+
+    def to_pool(x):                     # (B, T, ...) -> (1 + B*NP, ps, ...)
+        px = x.reshape((B * npg, ps) + x.shape[2:])
+        return jnp.concatenate([jnp.zeros_like(px[:1]), px])
+
+    pages = (QKVCache(to_pool(q.codes), to_pool(q.scale))
+             if isinstance(q, QKVCache) else to_pool(q))
+    return PagedKVCache(pages, _identity_table(B, npg))
+
+
+def paged_gather(cache: "PagedKVCache"):
+    """Dense ``(B, T, H, D)`` view (plain or :class:`QKVCache`) of a paged
+    cache: one pool gather per call — the jnp fallback path; the Pallas
+    paged kernel streams pages via the table instead and never calls this."""
+    table = cache.table                              # (B, NP)
+    B = table.shape[0]
+
+    def g(pool):
+        x = pool[table]                              # (B, NP, ps, ...)
+        return x.reshape((B, -1) + pool.shape[2:])
+
+    if isinstance(cache.pages, QKVCache):
+        return QKVCache(g(cache.pages.codes), g(cache.pages.scale))
+    return g(cache.pages)
+
+
+def kv_cache_init(shape: Tuple[int, ...], dtype,
+                  mode: Optional[str] = None,
+                  page_size: Optional[int] = None):
+    """Zeros KV-cache leaf for logical shape ``(..., B, T, H, D)``: a plain
+    array when quantization is off, else a :class:`QKVCache`; either is
+    wrapped in a :class:`PagedKVCache` (identity table, +1 trash page) when
+    paged mode is on."""
+    mode = kv_quant_mode() if mode is None else mode
+    ps = kv_page_size() if page_size is None else page_size
+    if ps > 0:
+        lead, (B, T, H, D) = shape[:-4], shape[-4:]
+        assert T % ps == 0, (
+            f"paged cache_len {T} not a multiple of page size {ps}; "
+            "size caches via aligned_cache_len")
+        npg = T // ps
+        pages = _kv_zeros(lead + (B * npg + 1, ps, H, D), dtype, mode)
+        return PagedKVCache(pages, _identity_table(B, npg, lead))
+    return _kv_zeros(shape, dtype, mode)
+
+
+def _kv_zeros(shape: Tuple[int, ...], dtype, mode: str):
     if mode == "off":
         return jnp.zeros(shape, dtype)
     dc = shape[-1] // 2 if mode == "int4" else shape[-1]
@@ -247,26 +381,58 @@ def kv_cache_init(shape: Tuple[int, ...], dtype,
                     jnp.zeros(shape[:-1], jnp.float32))
 
 
-def kv_cache_axes(axes: Tuple, mode: Optional[str] = None):
+def kv_cache_axes(axes: Tuple, mode: Optional[str] = None,
+                  page_size: Optional[int] = None):
     """Logical-axis tree matching :func:`kv_cache_init`'s structure."""
     mode = kv_quant_mode() if mode is None else mode
+    ps = kv_page_size() if page_size is None else page_size
+    if ps > 0:
+        lead = tuple(axes[:-4])
+        # pool has no batch axis (pages are shared across slots): replicate
+        # it; the table keeps the slot axis.
+        pool = lead + ("cache_pages", "cache_page_seq") + tuple(axes[-2:])
+        pages = pool if mode == "off" else QKVCache(pool, pool[:-1])
+        return PagedKVCache(pages, lead + (axes[-4], "cache_pages"))
     if mode == "off":
         return axes
     return QKVCache(tuple(axes), tuple(axes[:-1]))
 
 
 def kv_cache_store(k: jax.Array, total: int, cache_len: int,
-                   mode: Optional[str] = None):
-    """Prefill store: ring-place then (maybe) quantize in place."""
+                   mode: Optional[str] = None,
+                   page_size: Optional[int] = None):
+    """Prefill store: ring-place, (maybe) quantize, (maybe) page."""
     mode = kv_quant_mode() if mode is None else mode
+    ps = kv_page_size() if page_size is None else page_size
     ring = ring_cache_store(k, total, cache_len)
+    if ps > 0:
+        return paged_from_ring(ring, ps, mode)
     return ring if mode == "off" else kv_quantize(ring, mode)
 
 
 def kv_cache_update(cache, new: jax.Array, slot: jax.Array,
                     mode: Optional[str] = None):
     """Per-token ring write: quantizes ``new`` (B, 1, H, D) row-wise before
-    the per-row dynamic_update_slice when the cache is quantized."""
+    the per-row write when the cache is quantized; paged caches scatter the
+    row into ``pool[table[b, slot // ps], slot % ps]`` (rows whose table
+    entry is the trash page collide there harmlessly)."""
+    if isinstance(cache, PagedKVCache):
+        ps = cache.page_size
+        s = slot.astype(jnp.int32)
+        b = jnp.arange(cache.table.shape[-2], dtype=jnp.int32)
+        phys = cache.table[b, s // ps]               # (B,)
+        off = s % ps
+
+        def wr(pool, x):                             # x: (B, 1, ...)
+            return pool.at[phys, off].set(x[:, 0].astype(pool.dtype))
+
+        if isinstance(cache.pages, QKVCache):
+            mode = kv_quant_mode() if mode is None else mode
+            q = kv_quantize(new, mode)
+            return PagedKVCache(QKVCache(wr(cache.pages.codes, q.codes),
+                                         wr(cache.pages.scale, q.scale)),
+                                cache.table)
+        return PagedKVCache(wr(cache.pages, new), cache.table)
     if not isinstance(cache, QKVCache):
         return ring_cache_update(cache, new, slot)
     mode = kv_quant_mode() if mode is None else mode
@@ -276,13 +442,18 @@ def kv_cache_update(cache, new: jax.Array, slot: jax.Array,
 
 
 def kv_cache_len(cache) -> int:
-    """Cache capacity T of a (possibly stacked, possibly quantized) leaf."""
+    """Logical cache capacity T of a (stacked / quantized / paged) leaf."""
+    if isinstance(cache, PagedKVCache):
+        return cache.kv_len
     return (cache.codes if isinstance(cache, QKVCache) else cache).shape[-3]
 
 
 def kv_cast(cache, dtype):
     """``cache.astype(dtype)`` for plain arrays; identity for QKVCache (the
-    attention dispatch consumes codes+scales directly)."""
+    attention dispatch consumes codes+scales directly); recurses into the
+    pool for paged caches."""
+    if isinstance(cache, PagedKVCache):
+        return PagedKVCache(kv_cast(cache.pages, dtype), cache.table)
     return cache if isinstance(cache, QKVCache) else cache.astype(dtype)
 
 
@@ -321,6 +492,21 @@ def _attn_tile(qc, kc, vc, mask, m, l, acc, scale, cap):
     return m_new, l_new, acc_new
 
 
+def _decode_positions(q_offset, kv_positions, kv_valid_len, B, S, T):
+    """Per-sequence (B, S) q positions and (B, T) kv positions for the
+    decode kernels; kv_valid_len folds into the -1 (masked) sentinel."""
+    q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
+    q_pos = q_off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
+    if kv_positions is None:
+        kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32), (B, T))
+    else:
+        kv_pos = jnp.broadcast_to(kv_positions.astype(jnp.int32), (B, T))
+    if kv_valid_len is not None:
+        valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32), (B,))
+        kv_pos = jnp.where(kv_pos < valid[:, None], kv_pos, -1)
+    return q_pos, kv_pos
+
+
 def chunked_attention(
     q: jax.Array,                 # (B, S, Hq, D)
     k: Any,                       # (B, T, Hkv, D) array, or QKVCache
@@ -344,18 +530,43 @@ def chunked_attention(
     valid length, so it is masked) and the output sliced back — odd prompt
     lengths are legal on every path.
     """
-    quant = isinstance(k, QKVCache)
+    paged = isinstance(k, PagedKVCache)
     B, S, Hq, D = q.shape
-    if quant:
-        assert isinstance(v, QKVCache), "k quantized but v is not"
+    if paged:
+        assert isinstance(v, PagedKVCache), "k paged but v is not"
+        quant = isinstance(k.pages, QKVCache)
         T, Hkv = k.kv_len, k.num_heads
     else:
-        _, T, Hkv, _ = k.shape
+        quant = isinstance(k, QKVCache)
+        if quant:
+            assert isinstance(v, QKVCache), "k quantized but v is not"
+            T, Hkv = k.kv_len, k.num_heads
+        else:
+            _, T, Hkv, _ = k.shape
     G = Hq // Hkv
     scale = 1.0 / math.sqrt(D)
     cq = min(chunk_q, S)
     ck = min(chunk_kv, T)
     backend = attn_impl() if impl is None else impl
+
+    # paged KV (block tables): the Pallas paged kernel streams pages straight
+    # from the pool via scalar-prefetch page-table lookups; every other path
+    # first gathers the slot's pages into the dense (B, T, H, D) layout.
+    if paged:
+        if (backend == "pallas" and S * G <= PALLAS_DECODE_MAX_Q_ROWS
+                and paged_decode_supported()):
+            q_pos, kv_pos = _decode_positions(q_offset, kv_positions,
+                                              kv_valid_len, B, S, T)
+            if quant:
+                return flash_decode_paged_quant(
+                    q, k.pages.codes, k.pages.scale, v.pages.codes,
+                    v.pages.scale, k.table, q_pos, kv_pos, causal=causal,
+                    window=window, softcap=attn_softcap)
+            return flash_decode_paged(q, k.pages, v.pages, k.table, q_pos,
+                                      kv_pos, causal=causal, window=window,
+                                      softcap=attn_softcap)
+        k = paged_gather(k)
+        v = paged_gather(v)
 
     # training/prefill path: flash custom-VJP (O(S) activation memory)
     if (not quant and kv_positions is None and kv_valid_len is None and S > 1
@@ -381,18 +592,8 @@ def chunked_attention(
     # (-1 = empty slot; kv_valid_len folds into the same sentinel).
     if backend == "pallas":
         if S * G <= PALLAS_DECODE_MAX_Q_ROWS:
-            q_off = jnp.broadcast_to(jnp.asarray(q_offset, jnp.int32), (B,))
-            q_pos = q_off[:, None] + jnp.arange(S, dtype=jnp.int32)[None, :]
-            if kv_positions is None:
-                kv_pos = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32),
-                                          (B, T))
-            else:
-                kv_pos = jnp.broadcast_to(kv_positions.astype(jnp.int32),
-                                          (B, T))
-            if kv_valid_len is not None:
-                valid = jnp.broadcast_to(jnp.asarray(kv_valid_len, jnp.int32),
-                                         (B,))
-                kv_pos = jnp.where(kv_pos < valid[:, None], kv_pos, -1)
+            q_pos, kv_pos = _decode_positions(q_offset, kv_positions,
+                                              kv_valid_len, B, S, T)
             if quant:
                 # in-kernel dequant: HBM reads only codes + scales
                 return flash_decode_quant(

@@ -24,11 +24,12 @@ from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
-from repro.models.layers import (chunked_attention, dense, gated_mlp,
-                                 kv_cache_axes, kv_cache_init, kv_cache_len,
-                                 kv_cache_store, kv_cache_update, kv_cast,
-                                 ring_cache_update, ring_position_ids,
-                                 rms_norm, rope, softmax_xent, stack_trees)
+from repro.models.layers import (aligned_cache_len, chunked_attention, dense,
+                                 gated_mlp, kv_cache_axes, kv_cache_init,
+                                 kv_cache_len, kv_cache_store,
+                                 kv_cache_update, kv_cast, ring_cache_update,
+                                 ring_position_ids, rms_norm, rope,
+                                 softmax_xent, stack_trees)
 from repro.models.moe import moe_ffn, moe_param_specs
 
 
@@ -185,8 +186,8 @@ class TransformerLM:
     def cache_len(self, max_len: int) -> int:
         cfg = self.cfg
         if cfg.attention_kind == "sliding" and cfg.sliding_window > 0:
-            return min(max_len, cfg.sliding_window)
-        return max_len
+            return aligned_cache_len(min(max_len, cfg.sliding_window))
+        return aligned_cache_len(max_len)
 
     def init_cache(self, batch: int, max_len: int) -> Dict[str, Any]:
         cfg = self.cfg
@@ -206,13 +207,16 @@ class TransformerLM:
         return {"k": kv, "v": kv, "pos_ids": ("act_batch", "cache_seq"),
                 "pos": ("act_batch",)}
 
-    def prefill(self, params, batch,
-                max_len: Optional[int] = None) -> Tuple[jax.Array, Dict[str, Any]]:
+    def prefill(self, params, batch, max_len: Optional[int] = None,
+                full_logits: bool = False) -> Tuple[jax.Array, Dict[str, Any]]:
         """Run the full prompt, return last-token logits + filled cache.
 
         With ``max_len`` the cache is pre-sized for ``max_len`` total positions
         (ring-aligned so decode's ``pos % T`` writes land on the right slots)
         — prefill -> decode involves zero cache copies or repads.
+        ``full_logits=True`` returns logits for every position instead of the
+        last one (the paged engine right-pads prompts to a bucket length and
+        reads the logits at the true prompt end).
         """
         cfg = self.cfg
         tokens = batch["tokens"]
@@ -259,7 +263,7 @@ class TransformerLM:
             ck, cv = stack_trees(ks), stack_trees(vs)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["head"])
-        logits = dense(x[:, -1:], head, "bsd,dv->bsv")
+        logits = dense(x if full_logits else x[:, -1:], head, "bsd,dv->bsv")
         cache = {
             "k": ck, "v": cv,
             "pos_ids": ring_position_ids(B, S, T),

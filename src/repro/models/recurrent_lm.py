@@ -14,11 +14,11 @@ from repro.compat import optimization_barrier
 from repro.configs.base import ModelConfig
 from repro.core.mimdram import constrain
 from repro.models import module as mod
-from repro.models.layers import (chunked_attention, dense, gated_mlp,
-                                 kv_cache_axes, kv_cache_init, kv_cache_len,
-                                 kv_cache_store, kv_cache_update, kv_cast,
-                                 ring_cache_update, ring_position_ids,
-                                 rms_norm, softmax_xent)
+from repro.models.layers import (aligned_cache_len, chunked_attention, dense,
+                                 gated_mlp, kv_cache_axes, kv_cache_init,
+                                 kv_cache_len, kv_cache_store,
+                                 kv_cache_update, kv_cast, ring_cache_update,
+                                 ring_position_ids, rms_norm, softmax_xent)
 from repro.models.model import attn_param_specs, mlp_param_specs, qkv
 from repro.models.rglru import (init_rglru_state, recurrent_block,
                                 rglru_param_specs)
@@ -155,7 +155,7 @@ class GriffinLM:
 
     # -- serving ------------------------------------------------------------------
     def cache_len(self, max_len: int) -> int:
-        return min(max_len, self.cfg.local_window)
+        return aligned_cache_len(min(max_len, self.cfg.local_window))
 
     def _rec_state_zero(self, batch: int):
         cfg = self.cfg
@@ -195,7 +195,7 @@ class GriffinLM:
             "pos_ids": ("act_batch", "cache_seq"), "pos": ("act_batch",),
         }
 
-    def prefill(self, params, batch, max_len=None):
+    def prefill(self, params, batch, max_len=None, full_logits=False):
         cfg = self.cfg
         tokens = batch["tokens"]
         B, S = tokens.shape
@@ -229,7 +229,11 @@ class GriffinLM:
             x, st = self._rec_layer(tp, x, self._rec_state_zero(B))
             tail_states.append(st)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
-        logits = dense(x[:, -1:], params["embed"].T, "bsd,dv->bsv")
+        logits = dense(x if full_logits else x[:, -1:], params["embed"].T,
+                       "bsd,dv->bsv")
+        if cfg.logit_softcap > 0:
+            logits = cfg.logit_softcap * jnp.tanh(
+                logits.astype(jnp.float32) / cfg.logit_softcap).astype(logits.dtype)
         cache = {
             "rec1": s1, "rec2": s2, "k": ck, "v": cv, "tail": tail_states,
             "pos_ids": ring_position_ids(B, S, T),

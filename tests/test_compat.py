@@ -241,6 +241,32 @@ def test_pallas_call_sites_import_via_compat():
         + "\n".join(offenders))
 
 
+def test_pallas_lint_catches_direct_prefetch_grid_spec(tmp_path):
+    # self-test for the paged-KV lint extension: constructing the
+    # scalar-prefetch grid spec by its pltpu name must be flagged, while the
+    # compat-accessor spelling the paged kernels use passes
+    checker = _load_checker()
+    pkg = tmp_path / "src" / "pkg"
+    pkg.mkdir(parents=True)
+    (pkg / "bad.py").write_text(
+        "spec = PrefetchScalarGridSpec(num_scalar_prefetch=1)\n")
+    offenders = checker.find_pallas_offenders(str(tmp_path))
+    assert len(offenders) == 1 and "bad.py" in offenders[0]
+    (pkg / "bad.py").write_text(
+        "from repro.compat import import_pallas, pallas_prefetch_grid_spec\n"
+        "pl = import_pallas()\n"
+        "grid_spec = pallas_prefetch_grid_spec()\n"
+        "fn = pl.pallas_call(None, grid_spec=grid_spec)\n")
+    assert not checker.find_pallas_offenders(str(tmp_path))
+
+
+def test_pallas_prefetch_grid_spec_resolves():
+    # may legitimately be None only where the TPU namespace is absent
+    spec = compat.pallas_prefetch_grid_spec()
+    if compat.import_pallas_tpu() is not None:
+        assert spec is not None and callable(spec)
+
+
 def test_pallas_vmem_scratch_resolves():
     # the helper must hand out a usable scratch allocation on every install,
     # including ones where import_pallas_tpu() returns None

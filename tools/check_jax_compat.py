@@ -73,13 +73,21 @@ def find_offenders(repo: str) -> List[str]:
 # pure jnp — no new version-sensitive Pallas accessor was needed. If a future
 # kernel needs a NEW pl./pltpu. symbol, add it to repro.compat and extend
 # _PALLAS_NAME below so this lint keeps recognising compat-imported sites.
+#
+# Note (paged-KV PR): the paged decode kernels build a scalar-prefetch grid
+# spec (the page table rides as a prefetched scalar feeding kv BlockSpec
+# index maps) — its class lives in the version-sensitive pltpu namespace, so
+# it is obtained via compat's ``pallas_prefetch_grid_spec()`` accessor;
+# naming ``PrefetchScalarGridSpec`` directly is flagged below.
 _PALLAS_USE = re.compile(
-    r"\bpallas_call\s*\(|\bpltpu\s*\.\s*\w+\s*\(|\bpl\s*\.\s*BlockSpec\s*\(")
+    r"\bpallas_call\s*\(|\bpltpu\s*\.\s*\w+\s*\(|\bpl\s*\.\s*BlockSpec\s*\(|"
+    r"\bPrefetchScalarGridSpec\s*\(")
 # Two-part check so parenthesized multi-line imports pass: the file must
 # import *something* from repro.compat AND name a pallas accessor somewhere.
 _COMPAT_IMPORT = re.compile(r"from\s+repro\.compat[\w.]*\s+import\b")
 _PALLAS_NAME = re.compile(
-    r"\b(import_pallas|import_pallas_tpu|pallas_call|pallas_vmem_scratch)\b")
+    r"\b(import_pallas|import_pallas_tpu|pallas_call|pallas_vmem_scratch|"
+    r"pallas_prefetch_grid_spec)\b")
 
 
 def find_pallas_offenders(repo: str) -> List[str]:
