@@ -11,7 +11,10 @@ configs:
   * p50/p95 per-token latency
   * greedy byte-identity between the two engines (correctness gate)
 
-plus the continuous-batching engine draining a mixed-length queue.
+plus the continuous-batching engine draining a mixed-length queue, and the
+speculative-decoding cells (n-gram and layer-skip draft-verify inside the
+fused scan: accepted_len/draft, spec_speedup, and greedy-identity gates
+against the same layout with speculation off).
 Emits into the standard ``benchmarks/run.py`` CSV; ``benchmarks/report.py
 --serve-csv`` turns those rows into BENCH_serve.json for cross-PR tracking.
 """
@@ -137,6 +140,68 @@ def run(emit) -> None:
         assert ps["kv_bytes_per_token"] < s["kv_bytes_per_token"], (
             f"{cell}: paged KV HBM/token {ps['kv_bytes_per_token']:.1f} not "
             f"below contiguous baseline {s['kv_bytes_per_token']:.1f}")
+
+    # Speculative decoding inside the fused scan, on a repetitive-suffix
+    # queue (each prompt tiled from a 4-token period — the prompt-lookup
+    # workload). Every spec cell is gated byte-identical against the SAME
+    # layout with speculation off, fully drained, and at most the baseline's
+    # dispatches/token (the drafter/verifier live inside the existing chunk
+    # dispatch). acc_per_draft — mean committed tokens per draft-verify
+    # iteration, 1.0 = nothing accepted — is gated > 1.0 on the draft
+    # (layer-skip self-speculation) cells; the n-gram cell reports it
+    # informationally: with random smoke weights the model's continuation
+    # is non-repetitive, so lookup acceptance sits at chance (~1/vocab) —
+    # on trained weights this is the cell that wins. spec_speedup is wall
+    # clock vs the spec-off baseline; like kvq8, tok/s is not expected to
+    # improve on CPU where the extra (k+1)-row verify FLOPs are not free —
+    # the gated claims are identity, dispatch parity, and acceptance.
+    skw = dict(smoke=True, slots=4, requests=8, prompt_len=PROMPT, gen=16,
+               chunk=4, repeat_period=4)
+    spec_cells = (
+        ("spec_ngram", "ngram", {}),
+        ("spec_draft", "draft", {}),
+        ("spec_draft_paged_ps8", "draft", {"REPRO_KV_PAGES": "8"}),
+        ("spec_draft_paged_ps8_kvq8", "draft", {"REPRO_KV_PAGES": "8",
+                                                "REPRO_KV_QUANT": "int8"}),
+    )
+    spec_base = {}
+    for cell, mode, env in spec_cells:
+        os.environ.update(env)
+        try:
+            ekey = tuple(sorted(env.items()))
+            if ekey not in spec_base:
+                spec_base[ekey] = serve_queue("pimref-100m", spec="off",
+                                              **skw)
+            beng = spec_base[ekey]
+            seng = serve_queue("pimref-100m", spec=mode, spec_k=3, **skw)
+        finally:
+            for k in env:
+                os.environ.pop(k, None)
+        bs, ss = beng.stats, seng.stats
+        btoks = {c.uid: c.tokens for c in beng.completions}
+        stoks = {c.uid: c.tokens for c in seng.completions}
+        match = all(np.array_equal(stoks[u], btoks[u]) for u in btoks)
+        acc = ss["spec_accepted_len_per_draft"]
+        spec_speedup = ss["tokens_per_second"] / bs["tokens_per_second"]
+        emit(f"serve/engine/mixed_queue_{cell}",
+             1e6 / max(ss["tokens_per_second"], 1e-9),
+             f"tok_s={ss['tokens_per_second']:.1f};"
+             f"disp_per_tok={ss['dispatches_per_token']:.3f};"
+             f"acc_per_draft={acc:.3f};"
+             f"accept_hist={'/'.join(map(str, ss['spec_accept_hist']))};"
+             f"spec_speedup={spec_speedup:.2f};"
+             f"greedy_match={match}")
+        assert match, f"{cell}: speculative tokens diverge from spec-off"
+        assert len(seng.completions) == 8, f"{cell}: queue not fully drained"
+        assert (ss["dispatches_per_token"]
+                <= bs["dispatches_per_token"] + 1e-9), (
+            f"{cell}: speculation cost dispatches "
+            f"({ss['dispatches_per_token']:.3f} > "
+            f"{bs['dispatches_per_token']:.3f})")
+        if mode == "draft":
+            assert acc > 1.0, (
+                f"{cell}: accepted_len/draft {acc:.3f} not above the 1.0 "
+                "no-speculation floor")
 
 
 if __name__ == "__main__":

@@ -121,6 +121,7 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
         "tokens_s": {}, "dispatches_per_token": {}, "p95_us": {},
         "speedup": {}, "per_token_p50_us": {}, "kv_bytes_per_token": {},
         "kv_pages_peak": {}, "prefix_hits": {},
+        "accepted_len_per_draft": {}, "spec_speedup": {},
     }
     with open(csv_path) as f:
         for line in f:
@@ -143,7 +144,9 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
                          "p95_us": "p95_us", "speedup": "speedup",
                          "kv_b_per_tok": "kv_bytes_per_token",
                          "kv_pages_peak": "kv_pages_peak",
-                         "prefix_hits": "prefix_hits"}.get(k)
+                         "prefix_hits": "prefix_hits",
+                         "acc_per_draft": "accepted_len_per_draft",
+                         "spec_speedup": "spec_speedup"}.get(k)
                 if field is None:
                     continue
                 try:

@@ -10,6 +10,7 @@ import jax.numpy as jnp
 
 ATTN_IMPLS = ("auto", "pallas", "jnp")
 KV_QUANT_MODES = ("off", "int8", "int4", "auto")
+SPEC_DECODE_MODES = ("off", "ngram", "draft")
 
 
 def pad_axis(x: jax.Array, axis: int, to: int) -> jax.Array:
@@ -98,6 +99,57 @@ def kv_page_size() -> int:
     if ps < 0:
         raise ValueError(f"REPRO_KV_PAGES={v!r}: expected a non-negative int")
     return ps
+
+
+def spec_decode_mode() -> str:
+    """Speculative-decoding drafter for the fused decode scan.
+
+    ``REPRO_SPEC_DECODE=off|ngram|draft``: ``off`` (default) decodes one token
+    per scan iteration; ``ngram`` drafts ``spec_draft_len()`` tokens per
+    iteration by device-side bigram suffix lookup over the slot's
+    prompt+emitted history and verifies them in one multi-query decode pass;
+    ``draft`` drafts with a layer-skip pass through the target model's own
+    first layers (self-speculative — the draft shares the engine's cache
+    machinery literally: same params, same KV cache). Read at trace time, like
+    ``REPRO_ATTN_IMPL``: set the knob before building jitted programs (the
+    launchers plumb ``--spec-decode`` here). Greedy output is byte-identical
+    with speculation on or off.
+    """
+    v = os.environ.get("REPRO_SPEC_DECODE", "off").lower()
+    if v not in SPEC_DECODE_MODES:
+        raise ValueError(
+            f"REPRO_SPEC_DECODE={v!r}: expected one of {SPEC_DECODE_MODES}")
+    return v
+
+
+def spec_draft_len() -> int:
+    """Static draft length k for speculative decoding (``REPRO_SPEC_K``,
+    default 3): each fused-scan iteration verifies a (k+1)-token block —
+    the fed token plus k drafts — and commits 1..k+1 tokens."""
+    v = os.environ.get("REPRO_SPEC_K", "3")
+    try:
+        k = int(v)
+    except ValueError:
+        raise ValueError(f"REPRO_SPEC_K={v!r}: expected a positive int")
+    if k < 1:
+        raise ValueError(f"REPRO_SPEC_K={v!r}: expected a positive int")
+    return k
+
+
+def spec_draft_layers() -> int:
+    """Layer budget for the ``draft`` (layer-skip self-drafting) mode:
+    ``REPRO_SPEC_DRAFT_LAYERS`` (default 0 = half the target's layers,
+    at least one)."""
+    v = os.environ.get("REPRO_SPEC_DRAFT_LAYERS", "0")
+    try:
+        n = int(v)
+    except ValueError:
+        raise ValueError(
+            f"REPRO_SPEC_DRAFT_LAYERS={v!r}: expected a non-negative int")
+    if n < 0:
+        raise ValueError(
+            f"REPRO_SPEC_DRAFT_LAYERS={v!r}: expected a non-negative int")
+    return n
 
 
 def attn_impl() -> str:

@@ -5,6 +5,11 @@ with ``Hq % Hkv == 0`` (query head ``h`` belongs to kv head ``h // G``). The
 wrappers handle the GQA layout transform (no ``jnp.repeat`` of k/v — kv tiles
 are shared across the G query heads inside the kernel), default positions,
 and pad-to-block-multiple + slice for odd sequence lengths.
+
+The decode wrappers are shape-generic in ``S``: speculative decoding's
+draft-verify blocks (``S = k+1`` rows scored in one dispatch) reuse these
+exact kernels — position-based causal masking already gives every drafted
+row its correct visibility, so verification adds no new kernel variants.
 """
 from __future__ import annotations
 
@@ -90,10 +95,13 @@ def flash_decode(q: jax.Array, k: jax.Array, v: jax.Array,
                  interpret: Optional[bool] = None) -> jax.Array:
     """Decode-step attention against a (ring) KV cache.
 
-    q: (B, S, Hq, D) with small S (the fused-decode chunk step; typically 1),
-    k/v: (B, T, Hkv, D) cache, q_positions: (B, S) per-sequence absolute
-    positions, kv_positions: (B, T) per-slot positions (-1 = empty slot —
-    ring layout and valid-length masking are both expressed here).
+    q: (B, S, Hq, D) with small S — 1 for plain decode, or k+1 when the
+    serving layer verifies a speculative draft block in one dispatch (each
+    drafted row attends causally via its own q_position; no kernel change
+    is needed for speculation). k/v: (B, T, Hkv, D) cache, q_positions:
+    (B, S) per-sequence absolute positions, kv_positions: (B, T) per-slot
+    positions (-1 = empty slot — ring layout and valid-length masking are
+    both expressed here).
     """
     if interpret is None:
         interpret = use_interpret()

@@ -39,7 +39,7 @@ from repro.configs.base import ShapeConfig
 from repro.core.mimdram import Plan
 from repro.kernels.common import kv_page_size
 from repro.launch import specs as specs_lib
-from repro.launch.steps import make_serving_jits
+from repro.launch.steps import make_serving_jits, spec_config
 from repro.models.layers import PagedKVCache, QKVCache
 
 
@@ -141,23 +141,36 @@ class ServeEngine:
       chunk: decode tokens per dispatch (the fused scan length).
       eos_id: stop token (None = length-only stopping).
       temperature/top_k: sampling knobs (0 temperature = greedy).
+      spec/spec_k: speculative-decoding drafter ("off"|"ngram"|"draft") and
+        draft length (default: the REPRO_SPEC_DECODE / REPRO_SPEC_K knobs).
+        Transparent to callers — greedy completions are byte-identical with
+        speculation on or off; stats gain spec_accepted_len_per_draft and a
+        spec_accept_hist accepted-length histogram.
     """
 
     def __init__(self, model, params, plan: Plan, *, slots: int = 4,
                  prompt_len: int = 32, max_new: int = 32, chunk: int = 8,
                  max_len: Optional[int] = None, eos_id: Optional[int] = None,
-                 temperature: float = 0.0, top_k: int = 0, seed: int = 0):
+                 temperature: float = 0.0, top_k: int = 0, seed: int = 0,
+                 spec: Optional[str] = None, spec_k: Optional[int] = None):
         self.model, self.params, self.plan = model, params, plan
         self.slots, self.prompt_len, self.chunk = slots, prompt_len, chunk
         self.max_new, self.eos_id = max_new, eos_id
         self.max_len = max_len or (prompt_len + max_new)
         assert self.max_len >= prompt_len + 1
+        # speculative decoding: each fused-scan iteration verifies a
+        # (spec_k+1)-token block, so a chunk can write chunk*(spec_k+1)
+        # positions and the cache carries spec_k rows of k-ahead slack
+        self.spec, self.spec_k = spec_config(model, spec, spec_k)
+        self.chunk_span = chunk * (self.spec_k + 1) \
+            if self.spec != "off" else chunk
 
         # big cache = batch-1 prefill cache zeros, tiled to `slots` rows
         shape1 = ShapeConfig("engine_prefill", seq_len=prompt_len,
                              global_batch=1, mode="prefill")
-        small = specs_lib.prefill_cache_specs(model, model.cfg, shape1,
-                                              self.max_len)
+        small = specs_lib.prefill_cache_specs(
+            model, model.cfg, shape1,
+            self.max_len + (self.spec_k if self.spec != "off" else 0))
         paged_leaves = [l for l in jax.tree_util.tree_leaves(
             small, is_leaf=lambda x: isinstance(x, PagedKVCache))
             if isinstance(l, PagedKVCache)]
@@ -174,7 +187,8 @@ class ServeEngine:
 
         self._prefill, self._generate, rep, cache_sh = make_serving_jits(
             model, plan, max_len=self.max_len, chunk=chunk,
-            temperature=temperature, top_k=top_k, full_logits=self.paged)
+            temperature=temperature, top_k=top_k, full_logits=self.paged,
+            spec=self.spec, spec_k=self.spec_k)
         # family-aware prefill inputs: vlm reserves a patch prefix inside the
         # prompt bucket (shorter token field), audio needs src_embeds, etc.
         self._batch_template = specs_lib.input_specs(model.cfg, shape1)
@@ -217,10 +231,19 @@ class ServeEngine:
                                             is_leaf=is_marked)
         self._tok = jnp.zeros((slots, 1), jnp.int32)
         self._key = jax.random.PRNGKey(seed)
+        if self.spec != "off":
+            # n-gram drafter history: committed prompt+emitted tokens per
+            # slot, sized for the bucket + cap + within-chunk overshoot
+            self.hist_cap = self._tok_len + self.max_new + self.chunk_span
+            self._hist = jnp.zeros((slots, self.hist_cap), jnp.int32)
+            self._hist_len = jnp.zeros((slots,), jnp.int32)
         if rep is not None:
             self.cache = jax.device_put(self.cache, cache_sh)
             self._tok = jax.device_put(self._tok, rep)
             self._key = jax.device_put(self._key, rep)
+            if self.spec != "off":
+                self._hist = jax.device_put(self._hist, rep)
+                self._hist_len = jax.device_put(self._hist_len, rep)
 
         def pool_idx(bp, nd):
             # page axis sits nd-from-the-end: -4 for (.., P, ps, H, D) pools
@@ -228,7 +251,8 @@ class ServeEngine:
             return bp.ndim - nd
 
         def insert(big, tok, small_cache, first_tok, slot, dest_rows,
-                   table_row, pos_val):
+                   table_row, pos_val, hist=None, hist_len=None,
+                   tok_row=None, n_tok=None):
             def put(ax, b, s):
                 if isinstance(ax, str):      # paged leaf
                     def pp(bp, sp, nd):
@@ -256,10 +280,26 @@ class ServeEngine:
                 # prompt end, not at the bucket length
                 big["pos"] = big["pos"].at[slot].set(pos_val)
             tok = jax.lax.dynamic_update_slice(tok, first_tok, (slot, 0))
-            return big, tok
+            if hist is None:
+                return big, tok
+            # seed the n-gram drafter from the prefill tokens already on
+            # device (no extra host copy): rotate left-padded prompts so the
+            # true tokens sit at hist[:n_tok], zero the stale tail
+            row = tok_row[0].astype(jnp.int32)
+            if not self.paged:               # left-padded contiguous bucket
+                row = jnp.roll(row, n_tok - row.shape[0])
+            full = jnp.zeros((self.hist_cap,), jnp.int32)
+            full = full.at[:row.shape[0]].set(row)
+            hist = jax.lax.dynamic_update_slice(hist, full[None, :], (slot, 0))
+            hist_len = hist_len.at[slot].set(n_tok)
+            return big, tok, hist, hist_len
 
-        self._insert = jax.jit(insert, donate_argnums=(0, 1),
-                               out_shardings=(cache_sh, rep))
+        if self.spec != "off":
+            self._insert = jax.jit(insert, donate_argnums=(0, 1, 8, 9),
+                                   out_shardings=(cache_sh, rep, rep, rep))
+        else:
+            self._insert = jax.jit(insert, donate_argnums=(0, 1),
+                                   out_shardings=(cache_sh, rep))
 
         if self.paged:
             def clear_slot(big, slot):
@@ -314,6 +354,12 @@ class ServeEngine:
             "wall_seconds": 0.0, "chunk_seconds": [],
             "kv_pages_in_use": 0, "kv_pages_peak": 0, "prefix_hits": 0,
         }
+        if self.spec != "off":
+            # per-iteration accepted-length histogram: bin i = iterations
+            # that committed i+1 tokens (1 fed + i accepted drafts)
+            self.stats["spec_draft_iters"] = 0
+            self.stats["spec_emitted_tokens"] = 0
+            self.stats["spec_accept_hist"] = [0] * (self.spec_k + 1)
         if self.paged:
             self._page_bytes = sum(
                 leaf.nbytes // leaf.shape[pool_idx(leaf, nd)]
@@ -344,9 +390,12 @@ class ServeEngine:
     def submit(self, request: Request) -> None:
         self._queue.append(request)
 
-    def _prefill_batch(self, req: Request) -> Tuple[Dict[str, Any], int]:
-        """Build the bucketed batch-1 prefill batch; returns (batch, n) with
-        ``n`` the true prompt length inside the bucket (prefix + tokens).
+    def _prefill_batch(
+            self, req: Request) -> Tuple[Dict[str, Any], int, np.ndarray]:
+        """Build the bucketed batch-1 prefill batch; returns (batch, n, t)
+        with ``n`` the true prompt length inside the bucket (prefix + tokens)
+        and ``t`` the flat int32 prompt (reused by the page planner — no
+        second host copy of the request tokens).
 
         Over-long (or empty) prompts raise :class:`PromptTooLongError` /
         ``ValueError`` — the engine never silently truncates a prompt.
@@ -377,7 +426,7 @@ class ServeEngine:
                 raise ValueError(
                     f"request {req.uid}: input {k!r} has shape "
                     f"{tuple(batch[k].shape)}, engine bucket needs {sd.shape}")
-        return batch, n
+        return batch, n, t
 
     def _plan_pages(self, slot: int, toks: np.ndarray, n: int,
                     cap: int) -> Tuple[np.ndarray, np.ndarray]:
@@ -392,8 +441,11 @@ class ServeEngine:
         """
         ps, NP, T = self.page_size, self.n_logical_pages, self.cache_pos_len
         # positions beyond maxp hold only prefill pad rows, which decode never
-        # writes and always reads causally masked: their pages stay on trash
-        maxp = n + cap - 1 + self.chunk       # one past the last writable pos
+        # writes and always reads causally masked: their pages stay on trash.
+        # chunk_span covers within-chunk overrun incl. speculative k-ahead
+        # writes; anything past it lands on the trash page, affecting only
+        # tokens beyond the cap (which retirement drops)
+        maxp = n + cap - 1 + self.chunk_span  # one past the last writable pos
         n_alloc = min(-(-min(maxp, T) // ps), NP)
         dest = np.zeros(NP, np.int32)
         trow = np.zeros(NP, np.int32)
@@ -427,7 +479,7 @@ class ServeEngine:
             # except over-long/empty prompts, which retire with an explicit
             # error completion so queue draining survives bad inputs
             try:
-                batch, n = self._prefill_batch(req)
+                batch, n, t = self._prefill_batch(req)
             except (PromptTooLongError, ValueError) as e:
                 self.completions.append(Completion(
                     uid=req.uid, tokens=np.zeros((0,), np.int32),
@@ -437,23 +489,28 @@ class ServeEngine:
             logits, small = self._prefill(self.params, batch)
             if self.paged:
                 cap = min(req.max_new_tokens, self.max_len - n)
-                first = jnp.argmax(logits[:, n - 1]).reshape(1, 1)
-                dest, trow = self._plan_pages(
-                    slot, np.asarray(req.tokens, np.int32).reshape(-1), n, cap)
-                self.cache, self._tok = self._insert(
-                    self.cache, self._tok, small, first.astype(jnp.int32),
-                    jnp.int32(slot), jnp.asarray(dest), jnp.asarray(trow),
-                    jnp.int32(n))
+                first = jnp.argmax(logits[:, n - 1]).reshape(1, 1) \
+                    .astype(jnp.int32)
+                dest, trow = self._plan_pages(slot, t, n, cap)
+                args = (self.cache, self._tok, small, first, jnp.int32(slot),
+                        jnp.asarray(dest), jnp.asarray(trow), jnp.int32(n))
                 self._active[slot] = _Slot(request=req, n=n, cap=cap)
-                self._refresh_page_stats()
             else:
                 cap = min(req.max_new_tokens, self.max_len - self.prompt_len)
                 first = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
-                self.cache, self._tok = self._insert(
-                    self.cache, self._tok, small, first, jnp.int32(slot),
-                    jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
-                    jnp.int32(0))
-                self._active[slot] = _Slot(request=req, cap=cap)
+                args = (self.cache, self._tok, small, first, jnp.int32(slot),
+                        jnp.zeros((0,), jnp.int32), jnp.zeros((0,), jnp.int32),
+                        jnp.int32(0))
+                self._active[slot] = _Slot(request=req, n=n, cap=cap)
+            if self.spec != "off":
+                (self.cache, self._tok, self._hist,
+                 self._hist_len) = self._insert(
+                    *args, self._hist, self._hist_len, batch["tokens"],
+                    jnp.int32(len(t)))
+            else:
+                self.cache, self._tok = self._insert(*args)
+            if self.paged:
+                self._refresh_page_stats()
             self.stats["prefills"] += 1
 
     def _ensure_writable(self) -> None:
@@ -463,8 +520,13 @@ class ServeEngine:
         the first divergent write never lands on another slot's prefix."""
         ps, T = self.page_size, self.cache_pos_len
         for slot, st in self._active.items():
-            pos0 = st.n + st.chunks * self.chunk
-            pages = {(p % T) // ps for p in range(pos0, pos0 + self.chunk)}
+            # surviving slots always satisfy device pos = n + len(produced):
+            # EOS-truncated and cap-clamped slots retire at chunk end, so the
+            # host count is exact for every slot still decoding (speculative
+            # rollback rewinds pos to the committed length the same way)
+            pos0 = st.n + len(st.produced)
+            pages = {(p % T) // ps
+                     for p in range(pos0, pos0 + self.chunk_span)}
             for i in sorted(pages):
                 phys = int(self._host_table[slot, i])
                 if phys == 0:
@@ -494,14 +556,29 @@ class ServeEngine:
             self._refresh_page_stats()
         t0 = time.perf_counter()
         eos = jnp.int32(-1 if self.eos_id is None else self.eos_id)
-        (self.cache, self._tok, self._key, done, n_valid,
-         toks) = self._generate(self.params, self.cache, self._tok,
-                                self._key, eos)
+        if self.spec != "off":
+            (self.cache, self._tok, self._key, done, n_valid, toks,
+             self._hist, self._hist_len, acc) = self._generate(
+                self.params, self.cache, self._tok, self._key, eos,
+                self._hist, self._hist_len)
+        else:
+            (self.cache, self._tok, self._key, done, n_valid,
+             toks) = self._generate(self.params, self.cache, self._tok,
+                                    self._key, eos)
         toks_np = np.asarray(toks)          # ONE host sync per chunk
         done_np = np.asarray(done)
         n_np = np.asarray(n_valid)
         self.stats["chunk_seconds"].append(time.perf_counter() - t0)
         self.stats["decode_dispatches"] += 1
+        if self.spec != "off":
+            # accepted-length stats over live iterations of active slots only
+            # (free/retired slots ride the fused chunk and emit garbage rows)
+            acc_np = np.asarray(acc)[sorted(self._active)]
+            live = acc_np[acc_np >= 0]
+            self.stats["spec_draft_iters"] += int(live.size)
+            self.stats["spec_emitted_tokens"] += int(live.sum())
+            for c, freq in zip(*np.unique(live, return_counts=True)):
+                self.stats["spec_accept_hist"][int(c) - 1] += int(freq)
         for slot in list(self._active):
             st = self._active[slot]
             st.chunks += 1
@@ -546,6 +623,12 @@ class ServeEngine:
             self.stats["decode_dispatches"] / max(self.stats["tokens_out"], 1))
         self.stats["kv_bytes_per_token"] = (
             self.stats["kv_hbm_bytes_peak"] / max(self.stats["tokens_out"], 1))
+        if self.spec != "off":
+            # mean tokens committed per draft-verify iteration (1.0 = nothing
+            # accepted, spec_k+1 = every draft + bonus accepted)
+            self.stats["spec_accepted_len_per_draft"] = (
+                self.stats["spec_emitted_tokens"]
+                / max(self.stats["spec_draft_iters"], 1))
         return self.completions
 
     def compile_cache_size(self) -> Optional[int]:

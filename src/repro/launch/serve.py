@@ -28,7 +28,7 @@ from repro.core.mimdram import plan_sharding, use_plan
 from repro.launch import mesh as mesh_lib
 from repro.launch.engine import Request, ServeEngine
 from repro.launch.steps import (make_decode_step, make_serving_jits,
-                                sample_tokens)
+                                sample_tokens, spec_config)
 from repro.models import build_model, init_params
 
 
@@ -42,11 +42,15 @@ def _clone(tree):
 def serve(arch: str, *, smoke: bool = True, batch: int = 4,
           prompt_len: int = 32, gen: int = 16, seed: int = 0,
           engine: str = "fused", chunk: int = 8, temperature: float = 0.0,
-          top_k: int = 0, warmup: bool = True) -> Dict[str, Any]:
+          top_k: int = 0, warmup: bool = True, spec: Optional[str] = None,
+          spec_k: Optional[int] = None) -> Dict[str, Any]:
     """Prefill a synthetic batch then decode ``gen`` tokens per sequence.
 
     Returns tokens plus timing/dispatch metrics; with ``temperature == 0``
-    both engines produce byte-identical greedy tokens.
+    both engines produce byte-identical greedy tokens — including with
+    speculative decoding (``spec``/``spec_k``; default: the
+    REPRO_SPEC_DECODE / REPRO_SPEC_K knobs), which additionally reports
+    ``accepted_len_per_draft``.
     """
     assert engine in ("fused", "loop"), engine
     cfg = get_config(arch, smoke=smoke)
@@ -60,9 +64,12 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     with use_plan(plan):
         params = init_params(model.param_specs(), key)
 
+    spec, spec_k = spec_config(model, spec, spec_k)
+    if engine == "loop":
+        spec = "off"                 # per-token baseline never speculates
     prefill, generate, rep, cache_sh = make_serving_jits(
         model, plan, max_len=max_len, chunk=chunk, temperature=temperature,
-        top_k=top_k)
+        top_k=top_k, spec=spec, spec_k=spec_k)
     decode = jax.jit(make_decode_step(model, plan), donate_argnums=(1,),
                      out_shardings=(None, cache_sh))
     n_chunks = -(-gen // chunk)
@@ -89,10 +96,23 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32), rep)
     gkey = jax.device_put(jax.random.PRNGKey(seed + 1), rep)
 
+    if spec != "off":            # drafter history, seeded with the prompts
+        tokf = np.asarray(pre_batch["tokens"])
+        hcap = tokf.shape[1] + gen + chunk * (spec_k + 1)
+        h0 = np.zeros((batch, hcap), np.int32)
+        h0[:, :tokf.shape[1]] = tokf
+        hist = jax.device_put(jnp.asarray(h0), rep)
+        hist_len = jax.device_put(
+            jnp.full((batch,), tokf.shape[1], jnp.int32), rep)
+
     eos = jnp.int32(-1)          # batch mode: length-only stopping
     if warmup:     # compile outside the timed region (clone: both jits donate)
         if engine == "loop":
             jax.block_until_ready(decode(params, _clone(cache), tok))
+        elif spec != "off":
+            jax.block_until_ready(
+                generate(params, _clone(cache), tok, gkey, eos, _clone(hist),
+                         _clone(hist_len))[5])
         else:
             jax.block_until_ready(
                 generate(params, _clone(cache), tok, gkey, eos)[5])
@@ -117,6 +137,26 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         jax.block_until_ready(tok)
         toks = np.stack(out_tokens, axis=1)
         per_tok = np.asarray(step_times)
+    elif spec != "off":
+        # draft-verify chunks commit a variable 1..spec_k+1 tokens per
+        # iteration; drain the compacted buffers until every row has `gen`
+        rows: List[List[int]] = [[] for _ in range(batch)]
+        acc_sum = acc_iters = 0
+        while min(len(r) for r in rows) < gen:
+            ts = time.perf_counter()
+            cache, tok, gkey, _done, n_valid, toks_d, hist, hist_len, acc = \
+                generate(params, cache, tok, gkey, eos, hist, hist_len)
+            tb = np.asarray(toks_d)                     # host sync, per chunk
+            nv = np.asarray(n_valid)
+            live = np.asarray(acc)[np.asarray(acc) >= 0]
+            acc_iters += int(live.size)
+            acc_sum += int(live.sum())
+            for r in range(batch):
+                rows[r].extend(tb[r, : nv[r]].tolist())
+            dispatches += 1
+            step_times.append(time.perf_counter() - ts)
+        toks = np.asarray([r[:gen] for r in rows], np.int32)
+        per_tok = np.full(gen, sum(step_times) / gen)
     else:
         chunks: List[np.ndarray] = []
         for _ in range(n_chunks):
@@ -130,7 +170,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         per_tok = np.repeat(np.asarray(step_times) / chunk, chunk)[:gen]
     t_decode = time.time() - t0
 
-    return {
+    out = {
         "tokens": toks,
         "prefill_s": t_prefill,
         "decode_s_per_tok": t_decode / max(gen, 1),
@@ -140,17 +180,26 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         "per_token_p50_s": float(np.percentile(per_tok, 50)),
         "per_token_p95_s": float(np.percentile(per_tok, 95)),
     }
+    if spec != "off":
+        out["accepted_len_per_draft"] = acc_sum / max(acc_iters, 1)
+    return out
 
 
 def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
                 requests: int = 10, prompt_len: int = 32, gen: int = 16,
                 chunk: int = 8, seed: int = 0, temperature: float = 0.0,
-                top_k: int = 0, shared_prefix: int = 0) -> ServeEngine:
+                top_k: int = 0, shared_prefix: int = 0,
+                repeat_period: int = 0, spec: Optional[str] = None,
+                spec_k: Optional[int] = None) -> ServeEngine:
     """Continuous batching: drain a queue of mixed-length synthetic requests
     through a :class:`ServeEngine`; returns the drained engine (stats +
     completions). ``shared_prefix > 0`` gives every request the same first
     tokens (a common system prompt) — with the paged cache, concurrent slots
-    then hash-cons their full prefix pages instead of duplicating them."""
+    then hash-cons their full prefix pages instead of duplicating them.
+    ``repeat_period > 0`` tiles each prompt from a short per-request period
+    (the lookup-friendly repetitive-suffix workload for the n-gram drafter);
+    ``spec``/``spec_k`` select the speculative-decoding drafter (default:
+    the env knobs)."""
     cfg = get_config(arch, smoke=smoke)
     mesh = mesh_lib.make_local_mesh(("data",))
     plan = plan_sharding(
@@ -160,14 +209,18 @@ def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
         params = init_params(model.param_specs(), jax.random.PRNGKey(seed))
     eng = ServeEngine(model, params, plan, slots=slots, prompt_len=prompt_len,
                       max_new=gen, chunk=chunk, temperature=temperature,
-                      top_k=top_k, seed=seed)
+                      top_k=top_k, seed=seed, spec=spec, spec_k=spec_k)
     rng = np.random.default_rng(seed)
     prefix = rng.integers(1, cfg.vocab_size, shared_prefix).astype(np.int32)
     reqs = []
     for i in range(requests):
-        toks = rng.integers(1, cfg.vocab_size,
-                            rng.integers(max(4, shared_prefix + 1),
-                                         prompt_len + 1)).astype(np.int32)
+        n = int(rng.integers(max(4, shared_prefix + 1), prompt_len + 1))
+        if repeat_period > 0:
+            period = rng.integers(1, cfg.vocab_size,
+                                  repeat_period).astype(np.int32)
+            toks = np.tile(period, -(-n // repeat_period))[:n]
+        else:
+            toks = rng.integers(1, cfg.vocab_size, n).astype(np.int32)
         toks[:shared_prefix] = prefix
         reqs.append(Request(
             uid=i, tokens=toks,
@@ -204,6 +257,20 @@ def main() -> None:
     ap.add_argument("--shared-prefix", type=int, default=0,
                     help="queue mode: give every request the same first N "
                     "tokens (exercises paged prefix sharing)")
+    ap.add_argument("--spec-decode", default=None,
+                    choices=["off", "ngram", "draft"],
+                    help="speculative decoding drafter inside the fused scan "
+                    "(sets REPRO_SPEC_DECODE before programs are traced)")
+    ap.add_argument("--spec-k", type=int, default=None,
+                    help="draft length per speculative iteration "
+                    "(sets REPRO_SPEC_K)")
+    ap.add_argument("--repeat-period", type=int, default=0,
+                    help="queue mode: tile each prompt from a short period "
+                    "(lookup-friendly workload for the n-gram drafter)")
+    ap.add_argument("--spec-verify", action="store_true",
+                    help="queue mode: re-drain the identical queue with "
+                    "speculation forced off and assert byte-identical "
+                    "completions (greedy identity gate)")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
     if args.attn_impl:
@@ -212,12 +279,17 @@ def main() -> None:
         os.environ["REPRO_KV_QUANT"] = args.kv_quant
     if args.kv_page_size is not None:
         os.environ["REPRO_KV_PAGES"] = str(args.kv_page_size)
+    if args.spec_decode:
+        os.environ["REPRO_SPEC_DECODE"] = args.spec_decode
+    if args.spec_k is not None:
+        os.environ["REPRO_SPEC_K"] = str(args.spec_k)
     if args.mode == "queue":
         eng = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
                           requests=args.requests, prompt_len=args.prompt_len,
                           gen=args.gen, chunk=args.chunk,
                           temperature=args.temperature, top_k=args.top_k,
-                          shared_prefix=args.shared_prefix)
+                          shared_prefix=args.shared_prefix,
+                          repeat_period=args.repeat_period)
         s = eng.stats
         print(f"{len(eng.completions)} requests, {s['tokens_out']} tokens in "
               f"{s['wall_seconds']:.2f}s ({s['tokens_per_second']:.1f} tok/s, "
@@ -228,6 +300,26 @@ def main() -> None:
               + (f", {s['kv_pages_peak']} pages peak, "
                  f"{s['prefix_hits']} prefix hits" if eng.paged else "")
               + ")")
+        if eng.spec != "off":
+            print(f"spec: mode={eng.spec} k={eng.spec_k} accepted_len/draft="
+                  f"{s['spec_accepted_len_per_draft']:.3f} "
+                  f"accept hist={s['spec_accept_hist']}")
+        if args.spec_verify and eng.spec != "off":
+            ref = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
+                              requests=args.requests,
+                              prompt_len=args.prompt_len,
+                              gen=args.gen, chunk=args.chunk,
+                              temperature=args.temperature, top_k=args.top_k,
+                              shared_prefix=args.shared_prefix,
+                              repeat_period=args.repeat_period, spec="off")
+            got_by_uid = {c.uid: c.tokens for c in eng.completions}
+            for c in ref.completions:
+                got = got_by_uid[c.uid]
+                assert list(got) == list(c.tokens), (
+                    f"spec-verify mismatch on uid={c.uid}: "
+                    f"{got} != {c.tokens}")
+            print(f"spec-verify: {len(ref.completions)} completions "
+                  "byte-identical with speculation off")
         return
     out = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen, chunk=args.chunk,
@@ -237,6 +329,8 @@ def main() -> None:
           f"{out['decode_s_per_tok'] * 1e3:.1f}ms/tok  "
           f"throughput: {out['throughput_tok_s']:.1f} tok/s  "
           f"dispatches/token: {out['dispatches_per_token']:.3f}")
+    if "accepted_len_per_draft" in out:
+        print(f"spec accepted_len/draft: {out['accepted_len_per_draft']:.3f}")
     print("sample tokens:", out["tokens"][0][:10])
 
 

@@ -9,6 +9,7 @@ aware, per DESIGN.md §2.3.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import Any, Dict, Optional, Tuple
 
 import jax
@@ -185,51 +186,145 @@ def make_decode_step(model, plan: Plan):
     return decode_step
 
 
-def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float = 0.0,
-                  top_k: int = 0) -> jax.Array:
-    """On-device next-token selection. logits: (B, V) -> (B,) int32.
-
-    temperature <= 0 means greedy argmax (key unused); top_k > 0 restricts
-    sampling to the k highest-probability tokens.
-    """
-    if temperature <= 0.0:
-        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+def logits_transform(logits: jax.Array, temperature: float,
+                     top_k: int) -> jax.Array:
+    """Temperature/top-k logits transform shared by the sampler and the
+    speculative verifier's acceptance rule: fp32 scale by ``temperature``,
+    then mask everything below the k-th highest logit to -1e30. Requires
+    ``temperature > 0`` (greedy selection never calls this)."""
     lf = logits.astype(jnp.float32) / temperature
     if top_k > 0:
         kth = jax.lax.top_k(lf, top_k)[0][..., -1:]
         lf = jnp.where(lf < kth, -1e30, lf)
+    return lf
+
+
+def sample_tokens(logits: jax.Array, key: jax.Array, temperature: float = 0.0,
+                  top_k: int = 0) -> jax.Array:
+    """On-device token selection. logits: (..., V) -> (...) int32.
+
+    temperature <= 0 means greedy argmax (key unused); top_k > 0 restricts
+    sampling to the k highest-probability tokens. Shape-generic over leading
+    axes: the fused loop passes (B, V) rows, the speculative verifier passes
+    a whole (B, k+1, V) block and gets one target per drafted position.
+    """
+    if temperature <= 0.0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    lf = logits_transform(logits, temperature, top_k)
     return jax.random.categorical(key, lf, axis=-1).astype(jnp.int32)
+
+
+def spec_config(model, mode: Optional[str] = None,
+                k: Optional[int] = None) -> Tuple[str, int]:
+    """Effective ``(mode, k)`` for speculative decoding on ``model``.
+
+    ``mode``/``k`` default to the ``REPRO_SPEC_DECODE`` / ``REPRO_SPEC_K``
+    env knobs. Speculation is gated to the TransformerLM families
+    (dense/moe/vlm) with full attention: recurrent/SSM/enc-dec decode paths
+    have no multi-token verify step, and a sliding-window ring cache has no
+    slack for the k-ahead speculative writes (the window would wrap onto
+    rows the verify block still attends to). Unsupported combinations warn
+    once and fall back to ``("off", 0)`` — serving keeps working.
+    """
+    from repro.kernels import common as kcommon
+
+    mode = kcommon.spec_decode_mode() if mode is None else mode
+    if mode not in kcommon.SPEC_DECODE_MODES:
+        raise ValueError(f"spec mode {mode!r}: expected one of "
+                         f"{kcommon.SPEC_DECODE_MODES}")
+    if mode == "off":
+        return "off", 0
+    k = kcommon.spec_draft_len() if k is None else int(k)
+    cfg = getattr(model, "cfg", None)
+    fam = getattr(cfg, "family", None)
+    if fam not in ("dense", "moe", "vlm"):
+        warnings.warn(f"spec-decode {mode!r} unsupported for family {fam!r}; "
+                      "falling back to off")
+        return "off", 0
+    if getattr(cfg, "attention_kind", "full") == "sliding":
+        warnings.warn(f"spec-decode {mode!r} unsupported with sliding-window "
+                      "attention; falling back to off")
+        return "off", 0
+    return mode, k
+
+
+def ngram_draft(hist: jax.Array, hist_len: jax.Array, t0: jax.Array,
+                k: int) -> jax.Array:
+    """Device-side n-gram/prompt-lookup drafter: (B, k) draft tokens.
+
+    ``hist`` (B, Hcap) holds each slot's committed prompt+emitted tokens
+    (``hist_len`` valid, zero-padded); ``t0`` (B,) is the token about to be
+    emitted. Finds the most recent prior occurrence of ``t0`` — preferring a
+    bigram match where the preceding token also equals ``hist[len-1]`` — and
+    drafts the k tokens that followed it. Matches are restricted to
+    positions with at least one following token; a miss (or a continuation
+    running past ``hist_len``) yields garbage drafts, which are SAFE: the
+    verifier only commits tokens the target model confirms.
+    """
+    B, H = hist.shape
+    b = jnp.arange(B, dtype=jnp.int32)
+    pos = jnp.arange(H, dtype=jnp.int32)
+    valid = pos[None, :] < (hist_len - 1)[:, None]        # continuation exists
+    t_prev = hist[b, jnp.maximum(hist_len - 1, 0)]        # token before t0
+    prev_col = jnp.concatenate(
+        [jnp.full((B, 1), -1, hist.dtype), hist[:, :-1]], axis=1)
+    uni = (hist == t0[:, None]) & valid
+    bi = uni & (prev_col == t_prev[:, None])
+    j_bi = jnp.max(jnp.where(bi, pos[None, :], -1), axis=1)
+    j_uni = jnp.max(jnp.where(uni, pos[None, :], -1), axis=1)
+    j = jnp.where(j_bi >= 0, j_bi, j_uni)                 # -1 on miss
+    src = jnp.clip(j[:, None] + 1 + jnp.arange(k, dtype=jnp.int32)[None, :],
+                   0, H - 1)
+    return hist[b[:, None], src].astype(t0.dtype)
 
 
 def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
                       temperature: float = 0.0, top_k: int = 0,
-                      full_logits: bool = False):
+                      full_logits: bool = False,
+                      spec: Optional[str] = None,
+                      spec_k: Optional[int] = None):
     """Sharding-pinned (prefill, generate, rep, cache_sh) for one serving cell.
 
     Cache (and fed-back token/key) shardings are pinned identically on both
     jits so prefill's cache has exactly the signature generate emits — each
     program compiles once; every chunk after the first is a compile-cache
     hit. With a mesh-less plan the pins are skipped (rep/cache_sh = None).
+
+    ``spec``/``spec_k`` (default: the env knobs via :func:`spec_config`)
+    select the speculative-decoding drafter. In a spec mode the cache is
+    sized for ``max_len + spec_k`` positions — each verify block writes up to
+    ``spec_k`` rows past the fed position, and the extra slack guarantees
+    those k-ahead writes never wrap onto rows the block still attends to —
+    and ``generate`` takes/returns the drafter history (see
+    :func:`make_generate_step`), with the history buffers donated alongside
+    the cache.
     """
+    spec, spec_k = spec_config(model, spec, spec_k)
     if plan.mesh is not None:
         rep = NamedSharding(plan.mesh, P())
         cache_sh = named(plan, specs_lib.cache_pspecs(model, plan))
     else:
         rep = cache_sh = None
-    prefill = jax.jit(make_prefill_step(model, plan, max_len=max_len,
+    cache_len = max_len + (spec_k if spec != "off" else 0)
+    prefill = jax.jit(make_prefill_step(model, plan, max_len=cache_len,
                                         full_logits=full_logits),
                       out_shardings=(None, cache_sh))
-    generate = jax.jit(
-        make_generate_step(model, plan, chunk=chunk, temperature=temperature,
-                           top_k=top_k),
-        donate_argnums=(1,),
-        out_shardings=(cache_sh, rep, rep, rep, rep, rep))
+    gen_fn = make_generate_step(model, plan, chunk=chunk,
+                                temperature=temperature, top_k=top_k,
+                                spec=spec, spec_k=spec_k)
+    if spec == "off":
+        generate = jax.jit(gen_fn, donate_argnums=(1,),
+                           out_shardings=(cache_sh, rep, rep, rep, rep, rep))
+    else:
+        generate = jax.jit(gen_fn, donate_argnums=(1, 5, 6),
+                           out_shardings=(cache_sh,) + (rep,) * 8)
     return prefill, generate, rep, cache_sh
 
 
 def make_generate_step(model, plan: Plan, *, chunk: int,
-                       temperature: float = 0.0, top_k: int = 0):
-    """Fused decode loop: ``chunk`` tokens per dispatch via ``jax.lax.scan``.
+                       temperature: float = 0.0, top_k: int = 0,
+                       spec: str = "off", spec_k: int = 0):
+    """Fused decode loop: ``chunk`` iterations per dispatch via ``lax.scan``.
 
     The per-token serving loop pays one jit dispatch + one host sync per
     generated token; this rolls the whole decode loop (cache update, forward,
@@ -250,28 +345,138 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
     deterministic) and ``n_valid`` (B,) counts the tokens up to and including
     EOS. The engine retires slots from ``(done, n_valid)`` without scanning
     token buffers on the host.
-    """
 
-    def generate_step(params, cache, tok, key, eos_id):
+    Speculative decoding (``spec="ngram"|"draft"``, draft length ``spec_k``)
+    keeps the same chunked scan — still ONE dispatch per chunk — but each
+    iteration drafts k tokens, runs one (k+1)-token verify block through
+    ``decode_step`` (the multi-query shape the decode kernels already take),
+    and commits only the leading drafts whose next-token targets confirm
+    them, plus the model's own "bonus" token prediction after the last
+    accepted draft. Rollback is positional: ``cache["pos"]`` rewinds to the
+    committed length and the next iteration's (k+1)-row write window exactly
+    covers the rejected rows before anything attends to them, so no KV data
+    movement is needed for ring, paged, or quantized layouts. Signature
+    grows the drafter history (``hist`` (B, Hcap) committed prompt+output
+    tokens, ``hist_len`` (B,)) and the per-iteration accept counts:
+
+        generate_step(params, cache, tok, key, eos_id, hist, hist_len)
+            -> (cache, tok, key, done, n_valid, toks, hist, hist_len, acc)
+
+    ``toks`` is a compacted (B, chunk*(k+1)) buffer — the first ``n_valid``
+    entries per row are the emitted tokens, so callers consume it exactly
+    like the non-spec (B, chunk) buffer. ``acc`` (B, chunk) is the number of
+    tokens committed by each iteration (1..k+1; -1 for already-done slots) —
+    the engine's accepted-length histogram. Greedy (temperature <= 0) output
+    is byte-identical to ``spec="off"``; sampled speculation draws the
+    (k+1)-position targets from one key split per iteration via the shared
+    :func:`sample_tokens`, which is distribution-exact for a deterministic
+    drafter but follows a different key schedule than the per-token loop.
+    """
+    if spec == "off":
+        def generate_step(params, cache, tok, key, eos_id):
+            with use_plan(plan):
+                B = tok.shape[0]
+
+                def body(carry, _):
+                    cache, tok, key, done, n_valid = carry
+                    emitted = tok[:, 0]
+                    done_now = done | (emitted == eos_id)
+                    n_valid = n_valid + jnp.where(done, 0, 1).astype(jnp.int32)
+                    logits, cache = model.decode_step(params, cache, tok)
+                    key, sub = jax.random.split(key)
+                    nxt = sample_tokens(logits[:, -1], sub, temperature, top_k)
+                    nxt = jnp.where(done_now, emitted, nxt)  # freeze after EOS
+                    return (cache, nxt[:, None], key, done_now, n_valid), \
+                        emitted
+
+                done0 = jnp.zeros((B,), bool)
+                n0 = jnp.zeros((B,), jnp.int32)
+                (cache, tok, key, done, n_valid), toks = jax.lax.scan(
+                    body, (cache, tok, key, done0, n0), None, length=chunk)
+            return cache, tok, key, done, n_valid, toks.T   # toks: (B, chunk)
+        return generate_step
+
+    k = int(spec_k)
+    span = k + 1
+    if spec == "draft":
+        from repro.kernels import common as kcommon
+        n_draft_layers = (kcommon.spec_draft_layers()
+                          or max(1, model.cfg.num_layers // 2))
+        n_draft_layers = min(n_draft_layers, model.cfg.num_layers)
+
+    def generate_step(params, cache, tok, key, eos_id, hist, hist_len):
         with use_plan(plan):
             B = tok.shape[0]
+            Hcap = hist.shape[1]
+            Lbuf = chunk * span
+            b = jnp.arange(B, dtype=jnp.int32)
+            idx = jnp.arange(span, dtype=jnp.int32)
 
             def body(carry, _):
-                cache, tok, key, done, n_valid = carry
-                emitted = tok[:, 0]
-                done_now = done | (emitted == eos_id)
-                n_valid = n_valid + jnp.where(done, 0, 1).astype(jnp.int32)
-                logits, cache = model.decode_step(params, cache, tok)
+                cache, tok, key, done, n_valid, hist, hist_len, toks = carry
+                t0 = tok[:, 0]
+                if spec == "ngram":
+                    drafts = ngram_draft(hist, hist_len, t0, k)
+                else:
+                    # layer-skip self-drafting: k greedy single-token steps
+                    # through the first n_draft_layers of the target itself,
+                    # scribbling scratch KV the verify block overwrites.
+                    pos_in = cache["pos"]
+
+                    def dbody(dcarry, _):
+                        dc, dt = dcarry
+                        dlogits, dc = model.decode_step(
+                            params, dc, dt, layers=n_draft_layers)
+                        nt = jnp.argmax(dlogits[:, -1], axis=-1)
+                        nt = nt.astype(t0.dtype)
+                        return (dc, nt[:, None]), nt
+
+                    (cache, _), dr = jax.lax.scan(
+                        dbody, (cache, tok), None, length=k)
+                    cache = dict(cache, pos=pos_in)
+                    drafts = dr.T
+                blk = jnp.concatenate([tok, drafts], axis=1)   # (B, k+1)
+                pos0 = cache["pos"]
+                logits, cache = model.decode_step(params, cache, blk)
                 key, sub = jax.random.split(key)
-                nxt = sample_tokens(logits[:, -1], sub, temperature, top_k)
-                nxt = jnp.where(done_now, emitted, nxt)   # freeze after EOS
-                return (cache, nxt[:, None], key, done_now, n_valid), emitted
+                tgt = sample_tokens(logits, sub, temperature, top_k)
+                ok = (blk[:, 1:] == tgt[:, :-1]).astype(jnp.int32)
+                a = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)   # 0..k accepted
+                # commit blk[:, :a+1], truncated at the first EOS (inclusive)
+                is_eos = blk == eos_id
+                eos_hit = is_eos & (idx[None, :] <= a[:, None])
+                any_eos = eos_hit.any(axis=1)
+                first_eos = jnp.min(
+                    jnp.where(eos_hit, idx[None, :], span), axis=1)
+                cnt = jnp.where(any_eos, first_eos + 1, a + 1)
+                cnt = jnp.where(done, 0, cnt).astype(jnp.int32)
+                # rollback = positional rewind: the next iteration's k+1-row
+                # write window starts at pos0+cnt, covering every rejected row
+                # before anything attends to it (done slots advance 1, like
+                # the non-spec loop's frozen re-feed).
+                adv = jnp.maximum(cnt, 1).astype(pos0.dtype)
+                cache = dict(cache, pos=pos0 + adv)
+                bonus = tgt[b, a]
+                nxt = jnp.where(any_eos, jnp.asarray(eos_id, t0.dtype), bonus)
+                nxt = jnp.where(done, t0, nxt)                 # freeze re-feed
+                wv = idx[None, :] < cnt[:, None]
+                tslot = jnp.where(wv, n_valid[:, None] + idx[None, :], Lbuf)
+                toks = toks.at[b[:, None], tslot].set(blk, mode="drop")
+                hslot = jnp.where(wv, hist_len[:, None] + idx[None, :], Hcap)
+                hist = hist.at[b[:, None], hslot].set(
+                    blk.astype(hist.dtype), mode="drop")
+                acc_i = jnp.where(done, -1, cnt)
+                return (cache, nxt[:, None], key, done | any_eos,
+                        n_valid + cnt, hist, hist_len + cnt, toks), acc_i
 
             done0 = jnp.zeros((B,), bool)
             n0 = jnp.zeros((B,), jnp.int32)
-            (cache, tok, key, done, n_valid), toks = jax.lax.scan(
-                body, (cache, tok, key, done0, n0), None, length=chunk)
-        return cache, tok, key, done, n_valid, toks.T    # toks: (B, chunk)
+            toks0 = jnp.zeros((B, Lbuf), tok.dtype)
+            carry0 = (cache, tok, key, done0, n0, hist, hist_len, toks0)
+            (cache, tok, key, done, n_valid, hist, hist_len, toks), acc = \
+                jax.lax.scan(body, carry0, None, length=chunk)
+        return (cache, tok, key, done, n_valid, toks, hist, hist_len,
+                acc.T)                                         # acc: (B, chunk)
     return generate_step
 
 

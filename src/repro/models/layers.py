@@ -102,18 +102,28 @@ def softcap(x: jax.Array, cap: float) -> jax.Array:
 
 def ring_cache_update(cache: jax.Array, new: jax.Array,
                       slot: jax.Array) -> jax.Array:
-    """Write ``new`` (B, 1, ...) into ``cache`` (B, T, ...) at per-row ``slot``.
+    """Write ``new`` (B, S, ...) into ``cache`` (B, T, ...) at per-row slots.
 
     Each sequence in the batch carries its own write position (continuous
-    batching: slots are refilled independently), so the update is a per-row
-    dynamic_update_slice.
+    batching: slots are refilled independently). ``slot`` is (B,) for the
+    per-token decode path (S == 1 — a per-row dynamic_update_slice, the
+    original fused-decode write) or (B, S) explicit slots for a speculative
+    verify block (a scatter; block positions may wrap mod T, and the S
+    consecutive slots are distinct as long as S <= T).
     """
-    zeros = (jnp.int32(0),) * (cache.ndim - 2)
+    s = slot.astype(jnp.int32)
+    if new.shape[1] == 1 and s.ndim == 1:
+        zeros = (jnp.int32(0),) * (cache.ndim - 2)
 
-    def row(c, x, s):
-        return jax.lax.dynamic_update_slice(c, x.astype(c.dtype), (s,) + zeros)
+        def row(c, x, si):
+            return jax.lax.dynamic_update_slice(
+                c, x.astype(c.dtype), (si,) + zeros)
 
-    return jax.vmap(row)(cache, new, slot.astype(jnp.int32))
+        return jax.vmap(row)(cache, new, s)
+    if s.ndim == 1:
+        s = s[:, None]
+    b = jnp.arange(cache.shape[0], dtype=jnp.int32)[:, None]
+    return cache.at[b, s].set(new.astype(cache.dtype))
 
 
 def ring_cache_store(k: jax.Array, total: int, cache_len: int) -> jax.Array:
@@ -412,19 +422,29 @@ def kv_cache_store(k: jax.Array, total: int, cache_len: int,
 
 def kv_cache_update(cache, new: jax.Array, slot: jax.Array,
                     mode: Optional[str] = None):
-    """Per-token ring write: quantizes ``new`` (B, 1, H, D) row-wise before
-    the per-row write when the cache is quantized; paged caches scatter the
-    row into ``pool[table[b, slot // ps], slot % ps]`` (rows whose table
-    entry is the trash page collide there harmlessly)."""
+    """Ring/paged cache write: quantizes ``new`` (B, S, H, D) row-wise before
+    the write when the cache is quantized; paged caches scatter each row into
+    ``pool[table[b, slot // ps], slot % ps]`` (rows whose table entry is the
+    trash page collide there harmlessly). ``slot`` is (B,) for the per-token
+    decode path (S == 1) or (B, S) for a speculative verify block."""
     if isinstance(cache, PagedKVCache):
         ps = cache.page_size
         s = slot.astype(jnp.int32)
         b = jnp.arange(cache.table.shape[-2], dtype=jnp.int32)
-        phys = cache.table[b, s // ps]               # (B,)
-        off = s % ps
+        if new.shape[1] == 1 and s.ndim == 1:
+            phys = cache.table[b, s // ps]           # (B,)
+            off = s % ps
 
-        def wr(pool, x):                             # x: (B, 1, ...)
-            return pool.at[phys, off].set(x[:, 0].astype(pool.dtype))
+            def wr(pool, x):                         # x: (B, 1, ...)
+                return pool.at[phys, off].set(x[:, 0].astype(pool.dtype))
+        else:
+            if s.ndim == 1:
+                s = s[:, None]
+            phys = cache.table[b[:, None], s // ps]  # (B, S)
+            off = s % ps
+
+            def wr(pool, x):                         # x: (B, S, ...)
+                return pool.at[phys, off].set(x.astype(pool.dtype))
 
         if isinstance(cache.pages, QKVCache):
             mode = kv_quant_mode() if mode is None else mode

@@ -271,20 +271,35 @@ class TransformerLM:
         }
         return logits, cache
 
-    def decode_step(self, params, cache, tokens: jax.Array):
-        """tokens: (B, 1). Appends one token; returns next-token logits.
+    def decode_step(self, params, cache, tokens: jax.Array,
+                    layers: Optional[int] = None):
+        """tokens: (B, S). Appends S tokens per row; returns their logits.
 
         Positions are per-sequence (``pos``: (B,)) so continuous batching can
-        host sequences at different depths in one cache.
+        host sequences at different depths in one cache. S == 1 is the
+        per-token decode step; S > 1 is a speculative verify block (the fed
+        token plus k drafts), written at consecutive slots and attended
+        causally within the block via the position masks. ``layers`` (static)
+        truncates the forward to the first N transformer blocks — the
+        layer-skip self-drafting pass of speculative decoding — updating only
+        those layers' cache entries (the verify pass overwrites them with
+        identical values, so partial-layer writes never leak).
         """
         cfg = self.cfg
-        x = params["embed"].astype(self.cdtype)[tokens]          # (B,1,D)
+        S = tokens.shape[1]
+        x = params["embed"].astype(self.cdtype)[tokens]          # (B,S,D)
         pos = cache["pos"]                                       # (B,)
         T = kv_cache_len(cache["k"])
-        slot = (pos % T).astype(jnp.int32)                       # (B,)
-        positions = pos[:, None].astype(jnp.int32)               # (B, 1)
         window = cfg.sliding_window if cfg.attention_kind == "sliding" else 0
-        pos_ids = ring_cache_update(cache["pos_ids"], pos[:, None], slot)
+        if S == 1:
+            slot = (pos % T).astype(jnp.int32)                   # (B,)
+            positions = pos[:, None].astype(jnp.int32)           # (B, 1)
+            pos_ids = ring_cache_update(cache["pos_ids"], pos[:, None], slot)
+        else:
+            block_pos = pos[:, None] + jnp.arange(S, dtype=pos.dtype)
+            slot = (block_pos % T).astype(jnp.int32)             # (B, S)
+            positions = block_pos.astype(jnp.int32)
+            pos_ids = ring_cache_update(cache["pos_ids"], block_pos, slot)
 
         def body(carry, xs):
             h = carry
@@ -307,23 +322,31 @@ class TransformerLM:
                               layer_p["mlp"]["wi_up"], layer_p["mlp"]["wo"])
             return h + y, (ck, cv)
 
+        tm = jax.tree_util.tree_map
+        blocks, ck0, cv0 = params["blocks"], cache["k"], cache["v"]
+        if layers is not None:
+            blocks = tm(lambda a: a[:layers], blocks)
+            ck0 = tm(lambda a: a[:layers], ck0)
+            cv0 = tm(lambda a: a[:layers], cv0)
         if cfg.scan_layers:
-            x, (ck, cv) = jax.lax.scan(body, x, (params["blocks"], cache["k"],
-                                                 cache["v"]))
+            x, (ck, cv) = jax.lax.scan(body, x, (blocks, ck0, cv0))
         else:
+            n_layers = cfg.num_layers if layers is None else layers
             ks, vs = [], []
-            for i in range(cfg.num_layers):
-                xs = jax.tree_util.tree_map(lambda a: a[i],
-                                            (params["blocks"], cache["k"],
-                                             cache["v"]))
+            for i in range(n_layers):
+                xs = tm(lambda a: a[i], (blocks, ck0, cv0))
                 x, (k1, v1) = body(x, xs)
                 ks.append(k1)
                 vs.append(v1)
             ck, cv = stack_trees(ks), stack_trees(vs)
+        if layers is not None:
+            ck = tm(lambda f, p: f.at[:layers].set(p), cache["k"], ck)
+            cv = tm(lambda f, p: f.at[:layers].set(p), cache["v"], cv)
         x = rms_norm(x, params["final_norm"], cfg.norm_eps)
         head = (params["embed"].T if cfg.tie_embeddings else params["head"])
         logits = dense(x, head, "bsd,dv->bsv")
-        new_cache = {"k": ck, "v": cv, "pos_ids": pos_ids, "pos": pos + 1}
+        new_cache = {"k": ck, "v": cv, "pos_ids": pos_ids,
+                     "pos": pos + jnp.asarray(S, pos.dtype)}
         return logits, new_cache
 
 

@@ -1,0 +1,257 @@
+"""Speculative decoding inside the fused scan: draft-verify correctness.
+
+Greedy output must be byte-identical with speculation on or off — the
+drafter (n-gram lookup or layer-skip self-draft) only proposes tokens; the
+verifier commits exactly the prefix the full model would have produced
+token-by-token, rolls the cache position back past rejections, and the
+engine retires the same completions. These tests gate that contract at the
+serving-jits level and through the ServeEngine across every KV layout
+(contiguous, paged, quantized), plus direct coverage of the shared
+sampling helpers the verifier reuses.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ShapeConfig, get_config
+from repro.core.mimdram import plan_sharding, use_plan
+from repro.launch import mesh as mesh_lib
+from repro.launch.engine import Request, ServeEngine
+from repro.launch.steps import (logits_transform, make_serving_jits,
+                                ngram_draft, sample_tokens)
+from repro.models import build_model, init_params
+
+
+def _build(arch, batch, prompt_len, max_len):
+    cfg = get_config(arch, smoke=True)
+    mesh = mesh_lib.make_local_mesh(("data",))
+    plan = plan_sharding(cfg, ShapeConfig("serve", max_len, batch, "decode"),
+                        mesh)
+    model = build_model(cfg)
+    with use_plan(plan):
+        params = init_params(model.param_specs(), jax.random.PRNGKey(0))
+    return cfg, model, params, plan
+
+
+# ---------------------------------------------------------------------------
+# shared sampling helpers (used by both the sampler and the spec verifier)
+# ---------------------------------------------------------------------------
+
+def test_sample_tokens_greedy_deterministic():
+    """temperature=0 is a pure argmax: same logits -> same tokens, and the
+    PRNG key is ignored entirely."""
+    logits = jax.random.normal(jax.random.PRNGKey(3), (4, 7, 33))
+    a = sample_tokens(logits, jax.random.PRNGKey(0), temperature=0.0)
+    b = sample_tokens(logits, jax.random.PRNGKey(12345), temperature=0.0)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    np.testing.assert_array_equal(np.asarray(a),
+                                  np.asarray(jnp.argmax(logits, axis=-1)))
+    assert a.shape == (4, 7) and a.dtype == jnp.int32
+
+
+def test_sample_tokens_top_k_tie_boundary():
+    """Exact ties at the k-th score keep every tied token eligible (the
+    mask threshold is the k-th value, not a strict cut)."""
+    # top_k=2 with scores [5, 5, 5, 0]: threshold is 5, so all three tied
+    # tokens stay; token 3 must never appear.
+    logits = jnp.asarray([[5.0, 5.0, 5.0, 0.0]])
+    seen = set()
+    for seed in range(24):
+        s = sample_tokens(logits, jax.random.PRNGKey(seed), temperature=1.0,
+                          top_k=2)
+        seen.add(int(s[0]))
+    assert 3 not in seen
+    assert seen <= {0, 1, 2} and len(seen) > 1
+
+
+def test_logits_transform_matches_sampler():
+    """The factored helper is the exact distribution the sampler draws
+    from: greedy over transformed logits == greedy sampling, and masked
+    entries are unreachable."""
+    logits = jax.random.normal(jax.random.PRNGKey(1), (2, 11))
+    t = logits_transform(logits, temperature=0.7, top_k=3)
+    # masking only: argmax unchanged, exactly top-3 entries survive per row
+    np.testing.assert_array_equal(np.asarray(jnp.argmax(t, -1)),
+                                  np.asarray(jnp.argmax(logits, -1)))
+    assert int((np.asarray(t) > -1e29).sum()) == 2 * 3
+    # temperature scales in fp32 without changing the ordering
+    order = np.argsort(np.asarray(logits), -1)
+    np.testing.assert_array_equal(
+        np.argsort(np.asarray(logits_transform(logits, 2.5, 0)), -1), order)
+
+
+def test_ngram_draft_prefers_latest_bigram():
+    """The drafter matches on (prev, cur) bigrams, takes the most recent
+    match, and proposes its continuation."""
+    #                   0  1  2  3  4  5  6  7  8  9
+    hist = jnp.asarray([[5, 7, 2, 9, 5, 7, 4, 1, 5, 0]])
+    hist_len = jnp.asarray([9], jnp.int32)      # idx 9 not yet committed
+    # next token t0=7, preceded by hist[8]=5: bigram (5, 7) occurs at
+    # idx 1 and idx 5 -> the LATEST match wins -> drafts hist[6:8] = [4, 1]
+    d = ngram_draft(hist, hist_len, jnp.asarray([7], jnp.int32), 2)
+    np.testing.assert_array_equal(np.asarray(d), [[4, 1]])
+
+
+# ---------------------------------------------------------------------------
+# byte-identity at the serving-jits level (both drafters, direct scan calls)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("mode", ["ngram", "draft"])
+def test_spec_generate_byte_identity(mode):
+    """Greedy tokens from the speculative fused scan == the non-speculative
+    fused scan, byte-for-byte, on a batch mixing a lookup-friendly periodic
+    prompt with an adversarial random one."""
+    arch, batch, prompt_len, gen, chunk, k = "pimref-100m", 2, 16, 16, 4, 3
+    max_len = prompt_len + gen
+    cfg, model, params, plan = _build(arch, batch, prompt_len, max_len)
+
+    rng = np.random.default_rng(0)
+    period = rng.integers(1, cfg.vocab_size, 4)
+    toks = np.empty((batch, prompt_len), np.int32)
+    toks[0] = np.tile(period, prompt_len // 4)             # repetitive row
+    toks[1] = rng.integers(1, cfg.vocab_size, prompt_len)  # adversarial row
+
+    prefill, gen_off, _, _ = make_serving_jits(
+        model, plan, max_len=max_len, chunk=chunk, spec="off", spec_k=0)
+    logits, cache = prefill(params, {"tokens": jnp.asarray(toks)})
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    key = jax.random.PRNGKey(0)
+    outs = []
+    for _ in range(gen // chunk):
+        cache, tok, key, done, n_valid, out = gen_off(
+            params, cache, tok, key, jnp.int32(-1))
+        outs.append(np.asarray(out))
+    ref = np.concatenate(outs, 1)
+
+    prefill2, gen_sp, _, _ = make_serving_jits(
+        model, plan, max_len=max_len, chunk=chunk, spec=mode, spec_k=k)
+    logits, cache = prefill2(params, {"tokens": jnp.asarray(toks)})
+    tok = jnp.argmax(logits[:, -1:], axis=-1).astype(jnp.int32)
+    key = jax.random.PRNGKey(0)
+    hcap = prompt_len + gen + chunk * (k + 1)
+    h0 = np.zeros((batch, hcap), np.int32)
+    h0[:, :prompt_len] = toks
+    hist, hist_len = jnp.asarray(h0), jnp.full((batch,), prompt_len,
+                                               jnp.int32)
+    rows = [[] for _ in range(batch)]
+    accs = []
+    while min(len(r) for r in rows) < gen:
+        cache, tok, key, done, n_valid, tb, hist, hist_len, acc = gen_sp(
+            params, cache, tok, key, jnp.int32(-1), hist, hist_len)
+        n, tb = np.asarray(n_valid), np.asarray(tb)
+        accs.append(np.asarray(acc))
+        for r in range(batch):
+            rows[r].extend(tb[r, : n[r]].tolist())
+    got = np.stack([np.asarray(r[:gen]) for r in rows])
+    np.testing.assert_array_equal(got, ref, err_msg=f"mode={mode}")
+    live = np.concatenate(accs, 1)
+    live = live[live >= 0]
+    assert (live >= 1).all() and (live <= k + 1).all()
+    if mode == "draft":
+        # the layer-skip drafter lands some drafts even on random weights
+        assert float(live.mean()) > 1.0
+
+
+# ---------------------------------------------------------------------------
+# engine-level identity across KV layouts (mixed queue, slot reuse)
+# ---------------------------------------------------------------------------
+
+LAYOUTS = {
+    "contiguous": {},
+    "paged": {"REPRO_KV_PAGES": "8"},
+    "paged_q8": {"REPRO_KV_PAGES": "8", "REPRO_KV_QUANT": "int8"},
+    "q8": {"REPRO_KV_QUANT": "int8"},
+}
+
+
+def _mixed_queue(cfg, prompt_len, budgets, seed=0):
+    rng = np.random.default_rng(seed)
+    return [Request(uid=i,
+                    tokens=rng.integers(1, cfg.vocab_size,
+                                        rng.integers(3, prompt_len + 1)),
+                    max_new_tokens=n)
+            for i, n in enumerate(budgets)]
+
+
+@pytest.mark.parametrize("layout", sorted(LAYOUTS))
+def test_engine_spec_mixed_queue_identity(layout, monkeypatch):
+    """ServeEngine with REPRO_SPEC_DECODE=ngram drains a mixed queue (slot
+    reuse, EOS off, partial budgets) to completions byte-identical with
+    speculation off, without extra dispatches — for every KV cache layout."""
+    for k, v in LAYOUTS[layout].items():
+        monkeypatch.setenv(k, v)
+    prompt_len, max_new, chunk, slots = 8, 10, 4, 2
+    cfg, model, params, plan = _build("pimref-100m", slots, prompt_len,
+                                      prompt_len + max_new)
+    reqs = _mixed_queue(cfg, prompt_len, [3, 10, 5, 2, 7])
+
+    base = ServeEngine(model, params, plan, slots=slots,
+                       prompt_len=prompt_len, max_new=max_new, chunk=chunk,
+                       spec="off")
+    ref = {c.uid: c.tokens for c in base.run([Request(r.uid, r.tokens,
+                                                      r.max_new_tokens)
+                                              for r in reqs])}
+    eng = ServeEngine(model, params, plan, slots=slots,
+                      prompt_len=prompt_len, max_new=max_new, chunk=chunk,
+                      spec="ngram", spec_k=3)
+    comps = {c.uid: c for c in eng.run(reqs)}
+
+    assert len(comps) == len(ref) > slots               # slots were reused
+    for uid, toks in ref.items():
+        np.testing.assert_array_equal(comps[uid].tokens, toks,
+                                      err_msg=f"request {uid}")
+    # speculation must never cost dispatches: one per chunk, same as off
+    assert (eng.stats["decode_dispatches"]
+            <= base.stats["decode_dispatches"])
+    assert eng.stats["spec_draft_iters"] > 0
+    assert sum(eng.stats["spec_accept_hist"]) == eng.stats["spec_draft_iters"]
+
+
+def test_engine_spec_draft_acceptance(monkeypatch):
+    """Layer-skip self-drafting accepts real drafts (accepted_len/draft
+    strictly above the 1.0 no-speculation floor) while staying greedy
+    byte-identical and saving whole-chunk dispatches."""
+    prompt_len, max_new, chunk, slots = 8, 10, 4, 2
+    cfg, model, params, plan = _build("pimref-100m", slots, prompt_len,
+                                      prompt_len + max_new)
+    reqs = _mixed_queue(cfg, prompt_len, [3, 10, 5, 2, 7])
+
+    base = ServeEngine(model, params, plan, slots=slots,
+                       prompt_len=prompt_len, max_new=max_new, chunk=chunk,
+                       spec="off")
+    ref = {c.uid: c.tokens for c in base.run([Request(r.uid, r.tokens,
+                                                      r.max_new_tokens)
+                                              for r in reqs])}
+    eng = ServeEngine(model, params, plan, slots=slots,
+                      prompt_len=prompt_len, max_new=max_new, chunk=chunk,
+                      spec="draft", spec_k=3)
+    comps = {c.uid: c for c in eng.run(reqs)}
+    for uid, toks in ref.items():
+        np.testing.assert_array_equal(comps[uid].tokens, toks,
+                                      err_msg=f"request {uid}")
+    assert eng.stats["spec_accepted_len_per_draft"] > 1.0
+    assert (eng.stats["decode_dispatches"]
+            <= base.stats["decode_dispatches"])
+
+
+def test_spec_config_gates_unsupported():
+    """Sliding-window / recurrent decode paths can't host draft-verify —
+    the config helper falls back to off with a warning instead of
+    mis-decoding, and rejects unknown modes outright."""
+    from repro.launch.steps import spec_config
+
+    class _Stub:
+        def __init__(self, arch):
+            self.cfg = get_config(arch, smoke=True)
+
+    dense = _Stub("pimref-100m")
+    assert spec_config(dense, "ngram", 3) == ("ngram", 3)
+    assert spec_config(dense, "off", 3) == ("off", 0)
+    with pytest.raises(ValueError):
+        spec_config(dense, "bogus", 3)
+    with pytest.warns(UserWarning, match="sliding"):
+        assert spec_config(_Stub("mixtral-8x7b"), "ngram", 3) == ("off", 0)
+    with pytest.warns(UserWarning, match="family"):
+        assert spec_config(_Stub("recurrentgemma-2b"), "draft", 3) == \
+            ("off", 0)
