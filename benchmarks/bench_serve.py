@@ -24,6 +24,7 @@ import os
 
 import numpy as np
 
+from repro.distributed.chaos import ChaosConfig
 from repro.launch.serve import serve, serve_queue
 
 # decoder LM, recurrent (RG-LRU hybrid), MoE — the three serving families
@@ -202,6 +203,50 @@ def run(emit) -> None:
             assert acc > 1.0, (
                 f"{cell}: accepted_len/draft {acc:.3f} not above the 1.0 "
                 "no-speculation floor")
+
+    # Robustness soak: the paged engine drains the mixed queue under
+    # deterministic chaos — one request's logits poisoned mid-stream, one
+    # transient chunk failure (retried), one slow chunk, and a page steal.
+    # Gates: the drain terminates with exactly one completion per request,
+    # the injected failure is retried, and every fault-free survivor is
+    # byte-identical to a chaos-free drain. Deliberately NOT gated: zero
+    # error completions (the poisoned request MUST error, typed) and
+    # compile-cache size (quarantine/steal paths may swap programs).
+    ckw = dict(smoke=True, slots=4, requests=8, prompt_len=PROMPT, gen=16,
+               chunk=4)
+    chaos = ChaosConfig(seed=13, nan_targets={2: 3}, fail_chunks=[1],
+                        slow_chunks=[2], slow_ms=5.0, pages=2,
+                        steal_after_chunk=3)
+    os.environ["REPRO_KV_PAGES"] = "8"
+    try:
+        ceng = serve_queue("pimref-100m", chaos=chaos, **ckw)
+        ref = serve_queue("pimref-100m", **ckw)
+    finally:
+        os.environ.pop("REPRO_KV_PAGES", None)
+    cs = ceng.stats
+    rtoks = {c.uid: c.tokens for c in ref.completions}
+    poisoned = {e["uid"] for e in ceng.chaos_events if e["kind"] == "nan"}
+    survivors = [c for c in ceng.completions
+                 if c.finish_reason != "error" and c.uid not in poisoned]
+    survivor_match = all(
+        np.array_equal(c.tokens, rtoks[c.uid]) for c in survivors)
+    emit("serve/engine/chaos_soak",
+         1e6 / max(cs["tokens_per_second"], 1e-9),
+         f"tok_s={cs['tokens_per_second']:.1f};"
+         f"deadline_miss={cs['deadline_miss']};"
+         f"shed_events={cs['shed_events']};"
+         f"retries={cs['retries']};"
+         f"error_completions={cs['error_completions']};"
+         f"chaos_events={len(ceng.chaos_events)};"
+         f"survivors={len(survivors)};"
+         f"survivor_match={survivor_match}")
+    assert sorted(c.uid for c in ceng.completions) == list(range(8)), \
+        "chaos_soak: requests lost or duplicated under chaos"
+    assert cs["retries"] >= 1, "chaos_soak: injected failure never retried"
+    assert cs["error_completions"] >= 1, \
+        "chaos_soak: poisoned request did not error"
+    assert survivor_match, \
+        "chaos_soak: fault-free survivors diverge from chaos-free drain"
 
 
 if __name__ == "__main__":

@@ -122,6 +122,8 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
         "speedup": {}, "per_token_p50_us": {}, "kv_bytes_per_token": {},
         "kv_pages_peak": {}, "prefix_hits": {},
         "accepted_len_per_draft": {}, "spec_speedup": {},
+        "deadline_miss": {}, "shed_events": {}, "retries": {},
+        "error_completions": {},
     }
     with open(csv_path) as f:
         for line in f:
@@ -146,7 +148,11 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
                          "kv_pages_peak": "kv_pages_peak",
                          "prefix_hits": "prefix_hits",
                          "acc_per_draft": "accepted_len_per_draft",
-                         "spec_speedup": "spec_speedup"}.get(k)
+                         "spec_speedup": "spec_speedup",
+                         "deadline_miss": "deadline_miss",
+                         "shed_events": "shed_events",
+                         "retries": "retries",
+                         "error_completions": "error_completions"}.get(k)
                 if field is None:
                     continue
                 try:

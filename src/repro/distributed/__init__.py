@@ -1,7 +1,10 @@
+from repro.distributed.chaos import (ChaosConfig, ChaosError, ChaosMonkey,
+                                     TransientStepError)
 from repro.distributed.fault_tolerance import (PreemptionHandler,
                                                RestartManifest,
                                                StragglerMonitor)
 from repro.distributed.pipeline import bubble_fraction, pipelined_forward
 
 __all__ = ["PreemptionHandler", "StragglerMonitor", "RestartManifest",
+           "ChaosConfig", "ChaosError", "ChaosMonkey", "TransientStepError",
            "pipelined_forward", "bubble_fraction"]

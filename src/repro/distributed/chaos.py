@@ -1,0 +1,209 @@
+"""Deterministic fault injection for the serving engine.
+
+Real-hardware PIM studies (arXiv:2105.03814, arXiv:2205.14647) find that
+moving from simulation to deployed memory-centric systems is dominated by
+operational failure modes, not kernel math. This module makes those failure
+modes reproducible: a seeded :class:`ChaosMonkey` injects
+
+* **non-finite logits** — armed per (slot, position) through the fused
+  scan's ``logits_hook`` (see :func:`nan_logits_hook`), so the poison
+  appears exactly where a real activation overflow would, inside the jit;
+* **slow chunks** — a host-side sleep before a chunk dispatch, exercising
+  the StragglerMonitor watchdog and load shedding;
+* **transient step failures** — :class:`TransientStepError` raised *before*
+  the dispatch (a retry must never re-dispatch donated buffers), exercising
+  the engine's retry-with-backoff path;
+* **page-pool pressure** — physical pages stolen from the allocator's free
+  list, exercising admission backpressure and the typed exhaustion error.
+
+Every decision is drawn from ``numpy.random.default_rng(seed)`` and cached
+per injection site, so a drain with the same seed replays the same faults —
+including across an engine retry of the same chunk index (fire-once
+semantics). ``ChaosConfig.from_env()`` parses the ``REPRO_CHAOS`` knob
+(e.g. ``REPRO_CHAOS="seed=7,nan=1,slow=2,fail=1,pages=4"``) so CI smokes
+and the bench soak cell can arm injection without code changes.
+"""
+from __future__ import annotations
+
+import os
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence, Tuple
+
+import jax.numpy as jnp
+import numpy as np
+
+CHAOS_ENV = "REPRO_CHAOS"
+
+
+class ChaosError(RuntimeError):
+    """Base class for injected faults."""
+
+
+class TransientStepError(ChaosError):
+    """Injected transient chunk-dispatch failure (succeeds on retry)."""
+
+
+def nan_logits_hook(logits, row_pos, arm):
+    """Trace-time NaN injection for ``make_generate_step(logits_hook=...)``.
+
+    ``row_pos`` (B, S) is the absolute cache position of each logits row;
+    ``arm`` (B,) holds the poison position per slot (-1 = disarmed). Rows
+    whose position equals the armed position go NaN; all other rows pass
+    through bitwise-unchanged (``jnp.where`` with a false mask is identity),
+    so disarmed slots decode byte-identically to an unhooked program.
+    """
+    hit = (arm[:, None] >= 0) & (row_pos == arm[:, None])
+    return jnp.where(hit[..., None], jnp.nan, logits)
+
+
+@dataclass
+class ChaosConfig:
+    """Seeded fault-injection plan.
+
+    ``nan``/``slow``/``fail``/``pages`` are budgets: how many requests get
+    poisoned logits, how many chunks are slowed/failed, how many physical
+    pages are stolen. ``nan_targets`` / ``slow_chunks`` / ``fail_chunks``
+    are explicit overrides for deterministic tests (uid -> generated-token
+    index, and chunk indices respectively); when set they replace the
+    corresponding seeded draw.
+    """
+
+    seed: int = 0
+    nan: int = 0
+    slow: int = 0
+    fail: int = 0
+    pages: int = 0
+    slow_ms: float = 25.0
+    steal_after_chunk: int = 1
+    nan_targets: Optional[Dict[int, int]] = None
+    slow_chunks: Optional[Sequence[int]] = None
+    fail_chunks: Optional[Sequence[int]] = None
+
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "ChaosConfig":
+        """Parse ``"nan=1,slow=2,fail=1,pages=4,slow_ms=25,seed=7"``."""
+        kw: Dict[str, Any] = {"seed": seed}
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if k not in ("seed", "nan", "slow", "fail", "pages", "slow_ms",
+                         "steal_after_chunk"):
+                raise ValueError(f"{CHAOS_ENV}: unknown chaos knob {k!r}")
+            kw[k] = float(v) if k == "slow_ms" else int(v)
+        return cls(**kw)
+
+    @classmethod
+    def from_env(cls, seed: Optional[int] = None) -> Optional["ChaosConfig"]:
+        spec = os.environ.get(CHAOS_ENV, "")
+        if not spec:
+            return None
+        return cls.parse(spec, seed=0 if seed is None else seed)
+
+    @property
+    def wants_nan(self) -> bool:
+        return self.nan > 0 or bool(self.nan_targets)
+
+
+class ChaosMonkey:
+    """Executes a :class:`ChaosConfig` against one engine drain.
+
+    The engine calls :meth:`plan_request` at admit time (arming NaN
+    injection), :meth:`on_chunk` immediately before each fused-chunk
+    dispatch (sleep / raise), and :meth:`page_pressure` between chunks
+    (steal pages). All decisions are cached per injection site and fire at
+    most once, so a chunk retried after an injected failure replays clean —
+    deterministic under the engine's retry loop.
+    """
+
+    def __init__(self, cfg: ChaosConfig):
+        self.cfg = cfg
+        self.rng = np.random.default_rng(cfg.seed)
+        self.events: List[Dict[str, Any]] = []
+        self._nan_left = cfg.nan
+        self._slow_left = cfg.slow
+        self._fail_left = cfg.fail
+        self._chunk_plan: Dict[int, Tuple[bool, bool]] = {}
+        self._fired_slow: set = set()
+        self._fired_fail: set = set()
+        self.held_pages: List[int] = []
+
+    # -- NaN logits ---------------------------------------------------------
+    def plan_request(self, uid: int, prompt_len: int,
+                     max_new: int) -> Optional[int]:
+        """Absolute cache position to poison for this request (None = clean).
+
+        A poisoned request loses only tokens after the armed position: the
+        scan's finite guard quarantines the slot with ``g + 1`` tokens when
+        position ``prompt_len + g`` is armed.
+        """
+        if self.cfg.nan_targets is not None:
+            g = self.cfg.nan_targets.get(uid)
+            if g is None:
+                return None
+            pos = prompt_len + int(g)
+        else:
+            if self._nan_left <= 0:
+                return None
+            if self.rng.random() >= 0.5:
+                return None
+            self._nan_left -= 1
+            pos = prompt_len + int(self.rng.integers(0, max(max_new - 1, 1)))
+        self.events.append({"kind": "nan", "uid": uid, "pos": pos})
+        return pos
+
+    # -- slow / failing chunks ---------------------------------------------
+    def _plan_chunk(self, idx: int) -> Tuple[bool, bool]:
+        if idx not in self._chunk_plan:
+            if self.cfg.slow_chunks is not None:
+                slow = idx in self.cfg.slow_chunks
+            else:
+                slow = self._slow_left > 0 and self.rng.random() < 0.5
+            if self.cfg.fail_chunks is not None:
+                fail = idx in self.cfg.fail_chunks
+            else:
+                fail = self._fail_left > 0 and self.rng.random() < 0.4
+            if slow and self.cfg.slow_chunks is None:
+                self._slow_left -= 1
+            if fail and self.cfg.fail_chunks is None:
+                self._fail_left -= 1
+            self._chunk_plan[idx] = (slow, fail)
+        return self._chunk_plan[idx]
+
+    def on_chunk(self, idx: int) -> None:
+        """Called before dispatching chunk ``idx``; may sleep or raise.
+
+        Raises happen *before* the dispatch so the engine's retry never
+        replays a jit whose donated operands are already consumed.
+        """
+        slow, fail = self._plan_chunk(idx)
+        if slow and idx not in self._fired_slow:
+            self._fired_slow.add(idx)
+            self.events.append({"kind": "slow", "chunk": idx,
+                                "ms": self.cfg.slow_ms})
+            time.sleep(self.cfg.slow_ms / 1e3)
+        if fail and idx not in self._fired_fail:
+            self._fired_fail.add(idx)
+            self.events.append({"kind": "fail", "chunk": idx})
+            raise TransientStepError(
+                f"injected transient failure at chunk {idx} "
+                f"(seed={self.cfg.seed})")
+
+    # -- page-pool pressure -------------------------------------------------
+    def page_pressure(self, alloc, idx: int) -> None:
+        """Steal ``cfg.pages`` physical pages from ``alloc``'s free list
+        once, after ``steal_after_chunk`` chunks have dispatched."""
+        if self.cfg.pages <= 0 or self.held_pages or \
+                idx < self.cfg.steal_after_chunk:
+            return
+        steal = min(self.cfg.pages, len(alloc.free))
+        self.held_pages = [alloc.free.pop() for _ in range(steal)]
+        self.events.append({"kind": "pages", "chunk": idx,
+                            "stolen": len(self.held_pages)})
+
+    def release_pages(self, alloc) -> None:
+        alloc.free.extend(self.held_pages)
+        self.held_pages = []

@@ -85,6 +85,11 @@ class RestartManifest:
     arch: str = ""
     shape: str = ""
     straggler_events: List[Dict[str, float]] = field(default_factory=list)
+    # Serving checkpoint (``ServeEngine.snapshot()``): queued + in-flight
+    # request state and the engine/env config needed to re-prefill and drain
+    # to byte-identical greedy completions after a preemption. ``None`` for
+    # training manifests.
+    serve: Optional[Dict[str, Any]] = None
 
     def save(self, path: str) -> None:
         tmp = path + ".tmp"

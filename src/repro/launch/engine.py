@@ -22,14 +22,28 @@ stale in-flight decode writes land harmlessly.
 All device programs have static shapes (slots x prompt_len x max_len x
 chunk), so after the first chunk per shape everything is a compile-cache hit.
 
+Fault tolerance (the Proteus runtime-engine contract — adapt, don't crash):
+admission control reserves worst-case KV pages per request up front so
+demand allocation/COW can never exhaust the pool mid-decode; a bounded
+frontend queue rejects overflow with ``queue_full`` completions; per-request
+deadlines retire expired work; an on-device finite guard in the fused scan
+quarantines exactly the slot whose logits went non-finite; transient
+pre-dispatch failures retry with backoff; a StragglerMonitor watchdog on the
+chunk dispatch sheds load (speculation off, then smaller chunks) under
+sustained pressure; and ``snapshot()``/``load_snapshot()`` round-trip the
+queue + per-slot progress through a ``RestartManifest`` for
+preemption-safe serving. Every submitted request ends in exactly one
+:class:`Completion` — success or a typed error ``reason``.
+
     PYTHONPATH=src python -m repro.launch.serve --mode queue --arch pimref-100m
 """
 from __future__ import annotations
 
+import enum
 import time
 from collections import deque
 from dataclasses import dataclass, field
-from typing import Any, Deque, Dict, List, Optional, Tuple
+from typing import Any, Callable, Deque, Dict, List, Optional, Tuple
 
 import jax
 import jax.numpy as jnp
@@ -37,10 +51,33 @@ import numpy as np
 
 from repro.configs.base import ShapeConfig
 from repro.core.mimdram import Plan
+from repro.distributed.chaos import (ChaosConfig, ChaosMonkey,
+                                     TransientStepError, nan_logits_hook)
+from repro.distributed.fault_tolerance import StragglerMonitor
 from repro.kernels.common import kv_page_size
 from repro.launch import specs as specs_lib
-from repro.launch.steps import make_serving_jits, spec_config
+from repro.launch.steps import (make_generate_step, make_serving_jits,
+                                spec_config)
 from repro.models.layers import PagedKVCache, QKVCache
+
+
+class ErrorReason(str, enum.Enum):
+    """Typed ``Completion.reason`` values — the engine's failure model.
+
+    Shared by the engine, the serve CLI, and the bench columns; see the
+    README "Robust serving" table for which fault maps to which reason.
+    """
+
+    PROMPT_TOO_LONG = "prompt_too_long"   # prompt exceeds the engine bucket
+    BAD_REQUEST = "bad_request"           # empty prompt / malformed extras
+    QUEUE_FULL = "queue_full"             # bounded frontend queue overflow
+    DEADLINE = "deadline"                 # per-request deadline expired
+    PAGE_POOL = "page_pool"               # KV page pool cannot hold request
+    NAN_LOGITS = "nan_logits"             # finite guard quarantined the slot
+    STEP_FAILURE = "step_failure"         # chunk dispatch failed (post-retry)
+
+    def __str__(self) -> str:             # log/CSV-friendly
+        return self.value
 
 
 @dataclass
@@ -49,20 +86,25 @@ class Request:
     than the engine's prompt bucket are rejected with an ``error`` completion
     (never silently truncated), shorter ones are padded to the bucket.
     ``extras``: additional prefill inputs (e.g. ``patch_embeds``) shaped for
-    batch=1 at the engine's prompt length."""
+    batch=1 at the engine's prompt length. ``deadline_ms``: wall-clock budget
+    from submission; expiry retires the request with a ``deadline`` error
+    completion carrying whatever tokens were produced."""
 
     uid: int
     tokens: np.ndarray
     max_new_tokens: int
     extras: Optional[Dict[str, Any]] = None
+    deadline_ms: Optional[float] = None
 
 
 @dataclass
 class Completion:
     uid: int
-    tokens: np.ndarray            # generated token ids (1-D)
+    tokens: np.ndarray            # generated token ids (1-D; may be partial
+                                  # on error — e.g. deadline/nan quarantine)
     finish_reason: str            # "length" | "eos" | "error"
     error: Optional[str] = None   # set when finish_reason == "error"
+    reason: Optional[str] = None  # ErrorReason value when error, else None
 
 
 @dataclass
@@ -76,6 +118,29 @@ class _Slot:
 
 class PromptTooLongError(ValueError):
     """Prompt exceeds the engine's prompt bucket (no silent truncation)."""
+
+
+class PagePoolExhaustedError(RuntimeError):
+    """KV page pool has no free physical page.
+
+    With admission reservation this is defense-in-depth: the engine only
+    admits a request when its worst-case page demand fits alongside every
+    active slot's reservation, so only external pressure (the chaos
+    harness stealing pages, or an allocator bug) can trigger it. The engine
+    catches it and retires the offending request with a ``page_pool`` error
+    completion; other slots keep draining.
+    """
+
+    def __init__(self, alloc: "_PageAllocator", what: str):
+        self.pool_stats = {
+            "n_phys": alloc.n_phys, "free": len(alloc.free),
+            "used": alloc.used, "registered": len(alloc.registry),
+        }
+        super().__init__(
+            f"KV page pool exhausted during {what}: "
+            f"{self.pool_stats['used']}/{alloc.n_phys - 1} pages in use, "
+            f"{self.pool_stats['free']} free, "
+            f"{self.pool_stats['registered']} prefix-registered")
 
 
 class _PageAllocator:
@@ -96,7 +161,9 @@ class _PageAllocator:
         self.reg_key: Dict[int, Tuple[int, bytes]] = {}
         self.hits = 0
 
-    def alloc(self) -> int:
+    def alloc(self, what: str = "alloc") -> int:
+        if not self.free:
+            raise PagePoolExhaustedError(self, what)
         phys = self.free.pop()
         self.refs[phys] = 1
         return phys
@@ -146,18 +213,58 @@ class ServeEngine:
         Transparent to callers — greedy completions are byte-identical with
         speculation on or off; stats gain spec_accepted_len_per_draft and a
         spec_accept_hist accepted-length histogram.
+      max_queue: bound on the *waiting* queue (active slots are separate);
+        submissions past it complete immediately with a ``queue_full`` error.
+        None = unbounded (the pre-robustness behavior).
+      deadline_ms: default wall-clock budget applied to requests that do not
+        carry their own ``Request.deadline_ms``. None = no deadline.
+      page_pool_pages: physical KV pages in the paged pool (default
+        ``slots * n_logical_pages``, the worst case — admission then never
+        blocks on pages). Smaller pools make the page-reservation admission
+        control load-bearing: requests wait until their worst-case page
+        demand fits alongside every active slot's reservation.
+      chaos: a :class:`~repro.distributed.chaos.ChaosConfig` arming the
+        deterministic fault-injection harness for this engine.
+      max_retries/retry_backoff_s: chunk-level retry budget for transient
+        pre-dispatch failures (a retry never replays a dispatch whose
+        donated operands are consumed; real dispatch exceptions fail over to
+        ``step_failure`` completions for everything in flight).
+      straggler_threshold/shed_after: the chunk-dispatch watchdog —
+        chunks slower than ``threshold x`` the wall-time EMA are straggler
+        events, and ``shed_after`` *consecutive* events shed load one level
+        (speculation off, then chunk halved). Greedy output is
+        byte-identical across shed levels, so shedding is invisible except
+        in latency and ``stats``.
+      clock: monotonic-seconds callable for deadlines (tests inject a fake).
     """
 
     def __init__(self, model, params, plan: Plan, *, slots: int = 4,
                  prompt_len: int = 32, max_new: int = 32, chunk: int = 8,
                  max_len: Optional[int] = None, eos_id: Optional[int] = None,
                  temperature: float = 0.0, top_k: int = 0, seed: int = 0,
-                 spec: Optional[str] = None, spec_k: Optional[int] = None):
+                 spec: Optional[str] = None, spec_k: Optional[int] = None,
+                 max_queue: Optional[int] = None,
+                 deadline_ms: Optional[float] = None,
+                 page_pool_pages: Optional[int] = None,
+                 chaos: Optional[ChaosConfig] = None,
+                 max_retries: int = 2, retry_backoff_s: float = 0.02,
+                 straggler_threshold: float = 3.0, shed_after: int = 2,
+                 clock: Optional[Callable[[], float]] = None):
         self.model, self.params, self.plan = model, params, plan
         self.slots, self.prompt_len, self.chunk = slots, prompt_len, chunk
         self.max_new, self.eos_id = max_new, eos_id
         self.max_len = max_len or (prompt_len + max_new)
         assert self.max_len >= prompt_len + 1
+        self.max_queue, self.deadline_ms = max_queue, deadline_ms
+        self.max_retries, self.retry_backoff_s = max_retries, retry_backoff_s
+        self.shed_after = shed_after
+        self._clock = clock or time.monotonic
+        self._chaos = ChaosMonkey(chaos) if chaos is not None else None
+        self._straggler = StragglerMonitor(threshold=straggler_threshold,
+                                           warmup_steps=3)
+        self.seed = seed
+        self._temperature, self._top_k = temperature, top_k
+        self._dead = False
         # speculative decoding: each fused-scan iteration verifies a
         # (spec_k+1)-token block, so a chunk can write chunk*(spec_k+1)
         # positions and the cache carries spec_k rows of k-ahead slack
@@ -184,11 +291,26 @@ class ServeEngine:
                        for l in paged_leaves), (
                 "paged engine needs one shared (page_size, n_pages) across "
                 "all paged cache leaves")
+            # +1: physical page 0 is the reserved trash page
+            self.n_phys_pages = (slots * self.n_logical_pages
+                                 if page_pool_pages is None
+                                 else int(page_pool_pages)) + 1
 
+        # chaos NaN injection compiles a logits hook into the fused scan;
+        # arming is per-dispatch data (arm[slot] = poison position, -1 =
+        # disarmed), so clean dispatches stay bitwise-identical
+        self._hook = (nan_logits_hook if self._chaos is not None
+                      and self._chaos.cfg.wants_nan else None)
         self._prefill, self._generate, rep, cache_sh = make_serving_jits(
             model, plan, max_len=self.max_len, chunk=chunk,
             temperature=temperature, top_k=top_k, full_logits=self.paged,
-            spec=self.spec, spec_k=self.spec_k)
+            spec=self.spec, spec_k=self.spec_k, logits_hook=self._hook)
+        self._rep, self._cache_sh = rep, cache_sh
+        self._arm_np = np.full((slots,), -1, np.int32)
+        # load shedding swaps in degraded generate programs (built lazily);
+        # self._generate stays the warmed level-0 program
+        self._spec_live, self._chunk_live = self.spec, chunk
+        self._gen_shed = None
         # family-aware prefill inputs: vlm reserves a patch prefix inside the
         # prompt bucket (shorter token field), audio needs src_embeds, etc.
         self._batch_template = specs_lib.input_specs(model.cfg, shape1)
@@ -209,7 +331,7 @@ class ServeEngine:
 
         def tile(ax, sd):
             if isinstance(ax, str):          # paged: widen pool, zero tables
-                n_phys = slots * self.n_logical_pages + 1
+                n_phys = self.n_phys_pages
 
                 def z(s, nd):
                     shp = list(s.shape)
@@ -335,7 +457,7 @@ class ServeEngine:
                                        out_shardings=cache_sh)
             self._cow = jax.jit(cow, donate_argnums=(0,),
                                 out_shardings=cache_sh)
-            self._alloc = _PageAllocator(slots * self.n_logical_pages + 1)
+            self._alloc = _PageAllocator(self.n_phys_pages)
             self._host_table = np.zeros((slots, self.n_logical_pages),
                                         np.int32)
             # prefix sharing needs (a) pure-token prompts (patch/src extras
@@ -348,11 +470,21 @@ class ServeEngine:
         self._active: Dict[int, _Slot] = {}
         self._free: List[int] = list(range(slots))[::-1]
         self.completions: List[Completion] = []
+        # admission reservation: worst-case pages per active slot; the sum
+        # never exceeds the usable pool, so demand alloc/COW cannot exhaust
+        self._reserved: Dict[int, int] = {}
+        self._reserved_total = 0
+        self._deadline_at: Dict[int, float] = {}     # uid -> absolute clock
+        self._resume_prefix: Dict[int, List[int]] = {}   # restored progress
+        self._pressure = 0                           # consecutive stragglers
         # instrumentation for benchmarks / regression tracking
         self.stats: Dict[str, Any] = {
             "decode_dispatches": 0, "prefills": 0, "tokens_out": 0,
             "wall_seconds": 0.0, "chunk_seconds": [],
             "kv_pages_in_use": 0, "kv_pages_peak": 0, "prefix_hits": 0,
+            "deadline_miss": 0, "shed_events": 0, "retries": 0,
+            "error_completions": 0, "straggler_events": 0,
+            "admission_blocked": 0, "queue_peak": 0,
         }
         if self.spec != "off":
             # per-iteration accepted-length histogram: bin i = iterations
@@ -387,8 +519,60 @@ class ServeEngine:
         self.stats["kv_hbm_bytes_peak"] = self.stats["kv_hbm_bytes"]
 
     # -- queue interface -----------------------------------------------------
-    def submit(self, request: Request) -> None:
+    def _error(self, uid: int, tokens, reason: ErrorReason,
+               msg: str) -> None:
+        """Append a typed error completion (the only error path — keeps the
+        exactly-one-Completion invariant auditable)."""
+        self.completions.append(Completion(
+            uid=uid, tokens=np.asarray(tokens, np.int32).reshape(-1),
+            finish_reason="error", error=msg, reason=reason.value))
+        self.stats["error_completions"] += 1
+        self._deadline_at.pop(uid, None)
+
+    def submit(self, request: Request) -> bool:
+        """Enqueue a request; returns False (with an immediate ``queue_full``
+        error completion) when the bounded frontend queue is full."""
+        if self.max_queue is not None and len(self._queue) >= self.max_queue:
+            self._error(request.uid, (), ErrorReason.QUEUE_FULL,
+                        f"request {request.uid}: queue full "
+                        f"({len(self._queue)}/{self.max_queue} waiting)")
+            return False
+        dl = (request.deadline_ms if request.deadline_ms is not None
+              else self.deadline_ms)
+        if dl is not None:
+            self._deadline_at[request.uid] = self._clock() + dl / 1e3
         self._queue.append(request)
+        self.stats["queue_peak"] = max(self.stats["queue_peak"],
+                                       len(self._queue))
+        return True
+
+    def _expired(self, uid: int) -> bool:
+        at = self._deadline_at.get(uid)
+        return at is not None and self._clock() >= at
+
+    def _expire_deadlines(self) -> None:
+        """Retire queued and in-flight requests whose deadline passed.
+
+        Runs at the top of every step: a queued request never occupies a
+        slot after expiry, and an active one returns its partial tokens with
+        a ``deadline`` error completion (freeing the slot and its pages)."""
+        if not self._deadline_at:
+            return
+        keep: Deque[Request] = deque()
+        for req in self._queue:
+            if self._expired(req.uid):
+                self.stats["deadline_miss"] += 1
+                self._error(req.uid, (), ErrorReason.DEADLINE,
+                            f"request {req.uid}: deadline expired while "
+                            "queued")
+            else:
+                keep.append(req)
+        self._queue = keep
+        for slot in list(self._active):
+            if self._expired(self._active[slot].request.uid):
+                self.stats["deadline_miss"] += 1
+                self._retire(slot, "error", reason=ErrorReason.DEADLINE,
+                             error="deadline expired during decode")
 
     def _prefill_batch(
             self, req: Request) -> Tuple[Dict[str, Any], int, np.ndarray]:
@@ -440,27 +624,43 @@ class ServeEngine:
         sharing (their content already exists) and for unallocated tails.
         """
         ps, NP, T = self.page_size, self.n_logical_pages, self.cache_pos_len
+        dest = np.zeros(NP, np.int32)
+        trow = np.zeros(NP, np.int32)
+        claimed: List[int] = []
+        try:
+            for i in range(self._worst_pages(n, cap)):
+                key = ((i, toks[:(i + 1) * ps].tobytes())
+                       if self._share_ok and (i + 1) * ps <= n else None)
+                phys = self._alloc.lookup(key) if key is not None else None
+                if phys is None:
+                    phys = self._alloc.alloc("prefill page planning")
+                    if key is not None:
+                        self._alloc.register(phys, key)
+                    dest[i] = phys           # owned: prefill writes the page
+                claimed.append(phys)
+                trow[i] = phys
+        except PagePoolExhaustedError:
+            for phys in claimed:             # roll back shares and claims
+                self._alloc.decref(phys)
+            raise
+        self._host_table[slot] = trow
+        return dest, trow
+
+    def _worst_pages(self, n: int, cap: int) -> int:
+        """Worst-case physical pages a request can ever touch: the prefill
+        bucket plus ``cap`` decode steps plus within-chunk overrun (the
+        trailing prefill-pad positions stay on the trash page). Admission
+        reserves this many; COW only converts shared pages to private ones,
+        which the reservation already double-counts, so the sum of
+        reservations bounds true page demand."""
+        ps, NP, T = self.page_size, self.n_logical_pages, self.cache_pos_len
         # positions beyond maxp hold only prefill pad rows, which decode never
         # writes and always reads causally masked: their pages stay on trash.
         # chunk_span covers within-chunk overrun incl. speculative k-ahead
         # writes; anything past it lands on the trash page, affecting only
         # tokens beyond the cap (which retirement drops)
         maxp = n + cap - 1 + self.chunk_span  # one past the last writable pos
-        n_alloc = min(-(-min(maxp, T) // ps), NP)
-        dest = np.zeros(NP, np.int32)
-        trow = np.zeros(NP, np.int32)
-        for i in range(n_alloc):
-            key = ((i, toks[:(i + 1) * ps].tobytes())
-                   if self._share_ok and (i + 1) * ps <= n else None)
-            phys = self._alloc.lookup(key) if key is not None else None
-            if phys is None:
-                phys = self._alloc.alloc()
-                if key is not None:
-                    self._alloc.register(phys, key)
-                dest[i] = phys               # owned: prefill writes the page
-            trow[i] = phys
-        self._host_table[slot] = trow
-        return dest, trow
+        return min(-(-min(maxp, T) // ps), NP)
 
     def _refresh_page_stats(self) -> None:
         used = self._alloc.used
@@ -473,25 +673,54 @@ class ServeEngine:
 
     def _admit(self) -> None:
         while self._free and self._queue:
-            req = self._queue.popleft()
+            req = self._queue[0]
             # build+validate the batch BEFORE claiming a slot: a malformed
             # request raises to the caller without leaking concurrency —
-            # except over-long/empty prompts, which retire with an explicit
-            # error completion so queue draining survives bad inputs
+            # except over-long/empty/misshaped prompts, which retire with an
+            # explicit error completion so queue draining survives bad inputs
             try:
                 batch, n, t = self._prefill_batch(req)
-            except (PromptTooLongError, ValueError) as e:
-                self.completions.append(Completion(
-                    uid=req.uid, tokens=np.zeros((0,), np.int32),
-                    finish_reason="error", error=str(e)))
+            except PromptTooLongError as e:
+                self._queue.popleft()
+                self._error(req.uid, (), ErrorReason.PROMPT_TOO_LONG, str(e))
                 continue
+            except ValueError as e:
+                self._queue.popleft()
+                self._error(req.uid, (), ErrorReason.BAD_REQUEST, str(e))
+                continue
+            if self.paged:
+                cap = min(req.max_new_tokens, self.max_len - n)
+                need = self._worst_pages(n, cap)
+                capacity = self.n_phys_pages - 1
+                if need > capacity:
+                    self._queue.popleft()
+                    self._error(
+                        req.uid, (), ErrorReason.PAGE_POOL,
+                        f"request {req.uid}: needs {need} KV pages, pool "
+                        f"holds {capacity} (shrink the request or grow "
+                        "page_pool_pages)")
+                    continue
+                if self._reserved_total + need > capacity:
+                    # backpressure: hold the request until retirements free
+                    # reservations — never admit into possible exhaustion
+                    self.stats["admission_blocked"] += 1
+                    break
+            self._queue.popleft()
             slot = self._free.pop()
             logits, small = self._prefill(self.params, batch)
             if self.paged:
-                cap = min(req.max_new_tokens, self.max_len - n)
                 first = jnp.argmax(logits[:, n - 1]).reshape(1, 1) \
                     .astype(jnp.int32)
-                dest, trow = self._plan_pages(slot, t, n, cap)
+                try:
+                    dest, trow = self._plan_pages(slot, t, n, cap)
+                except PagePoolExhaustedError as e:
+                    # reachable only under external pressure (chaos steal):
+                    # the reservation invariant covers engine-driven demand
+                    self._free.append(slot)
+                    self._error(req.uid, (), ErrorReason.PAGE_POOL, str(e))
+                    continue
+                self._reserved[slot] = need
+                self._reserved_total += need
                 args = (self.cache, self._tok, small, first, jnp.int32(slot),
                         jnp.asarray(dest), jnp.asarray(trow), jnp.int32(n))
                 self._active[slot] = _Slot(request=req, n=n, cap=cap)
@@ -509,6 +738,12 @@ class ServeEngine:
                     jnp.int32(len(t)))
             else:
                 self.cache, self._tok = self._insert(*args)
+            if self._hook is not None:
+                # absolute logits positions: true prompt end (paged
+                # right-pad) vs bucket end (contiguous left-pad)
+                base = n if self.paged else self.prompt_len
+                pos = self._chaos.plan_request(req.uid, base, cap)
+                self._arm_np[slot] = -1 if pos is None else pos
             if self.paged:
                 self._refresh_page_stats()
             self.stats["prefills"] += 1
@@ -519,7 +754,7 @@ class ServeEngine:
         sole-owned pages still in the prefix registry are unregistered —
         the first divergent write never lands on another slot's prefix."""
         ps, T = self.page_size, self.cache_pos_len
-        for slot, st in self._active.items():
+        for slot, st in list(self._active.items()):
             # surviving slots always satisfy device pos = n + len(produced):
             # EOS-truncated and cap-clamped slots retire at chunk end, so the
             # host count is exact for every slot still decoding (speculative
@@ -527,19 +762,27 @@ class ServeEngine:
             pos0 = st.n + len(st.produced)
             pages = {(p % T) // ps
                      for p in range(pos0, pos0 + self.chunk_span)}
-            for i in sorted(pages):
-                phys = int(self._host_table[slot, i])
-                if phys == 0:
-                    continue                  # unallocated tail -> trash sink
-                if self._alloc.refs[phys] > 1:
-                    new = self._alloc.alloc()
-                    self.cache = self._cow(
-                        self.cache, jnp.int32(slot), jnp.int32(i),
-                        jnp.int32(phys), jnp.int32(new))
-                    self._alloc.refs[phys] -= 1
-                    self._host_table[slot, i] = new
-                elif phys in self._alloc.reg_key:
-                    self._alloc.unregister(phys)
+            try:
+                for i in sorted(pages):
+                    phys = int(self._host_table[slot, i])
+                    if phys == 0:
+                        continue              # unallocated tail -> trash sink
+                    if self._alloc.refs[phys] > 1:
+                        new = self._alloc.alloc("copy-on-write")
+                        self.cache = self._cow(
+                            self.cache, jnp.int32(slot), jnp.int32(i),
+                            jnp.int32(phys), jnp.int32(new))
+                        self._alloc.refs[phys] -= 1
+                        self._host_table[slot, i] = new
+                    elif phys in self._alloc.reg_key:
+                        self._alloc.unregister(phys)
+            except PagePoolExhaustedError as e:
+                # reachable only under external page pressure (reservation
+                # covers engine-driven COW): quarantine this slot — its
+                # partial tokens return with a typed error, its freed pages
+                # let the remaining slots keep draining
+                self._retire(slot, "error", reason=ErrorReason.PAGE_POOL,
+                             error=str(e))
 
     def step(self) -> bool:
         """Admit waiting requests, run one fused decode chunk, retire finished
@@ -548,29 +791,78 @@ class ServeEngine:
         EOS detection ran on device inside the fused chunk (the scan carries
         a per-slot ``done`` flag and a valid-token count), so retirement here
         is a per-slot slice — no host-side scan over the token buffer."""
+        if self._dead:
+            return False
+        idx = self.stats["decode_dispatches"]        # chunk index
+        if self._chaos is not None and self.paged:
+            self._chaos.page_pressure(self._alloc, idx)
+        self._expire_deadlines()
         self._admit()
         if not self._active:
             return bool(self._queue)
         if self.paged:
             self._ensure_writable()
             self._refresh_page_stats()
+            if not self._active:                     # COW quarantine emptied
+                return bool(self._queue)
+        # the watchdog window opens before fault handling: injected slow
+        # chunks and retry backoff are exactly the stalls a straggler
+        # monitor must see
+        self._straggler.step_start()
+        # transient faults fire BEFORE the dispatch and retry with backoff;
+        # the dispatch itself is never replayed (its donated operands are
+        # consumed), so a real dispatch exception fails everything over
+        attempt = 0
+        while self._chaos is not None:
+            try:
+                self._chaos.on_chunk(idx)
+                break
+            except TransientStepError as e:
+                attempt += 1
+                self.stats["retries"] += 1
+                if attempt > self.max_retries:
+                    self._fail_all(f"transient failure persisted past "
+                                   f"{self.max_retries} retries: {e}")
+                    return False
+                time.sleep(self.retry_backoff_s * attempt)
         t0 = time.perf_counter()
         eos = jnp.int32(-1 if self.eos_id is None else self.eos_id)
-        if self.spec != "off":
+        spec_live = self._spec_live != "off"
+        gen = self._gen_shed if self._gen_shed is not None else self._generate
+        args = (self.params, self.cache, self._tok, self._key, eos)
+        if spec_live:
+            args += (self._hist, self._hist_len)
+        if self._hook is not None:
+            args += (jnp.asarray(self._arm_np),)
+        try:
+            out = gen(*args)
+        except Exception as e:  # noqa: BLE001 — donated operands consumed
+            self._fail_all(f"chunk dispatch failed: {e!r}")
+            return False
+        if spec_live:
             (self.cache, self._tok, self._key, done, n_valid, toks,
-             self._hist, self._hist_len, acc) = self._generate(
-                self.params, self.cache, self._tok, self._key, eos,
-                self._hist, self._hist_len)
+             self._hist, self._hist_len, acc, failed) = out
         else:
-            (self.cache, self._tok, self._key, done, n_valid,
-             toks) = self._generate(self.params, self.cache, self._tok,
-                                    self._key, eos)
+            (self.cache, self._tok, self._key, done, n_valid, toks,
+             failed) = out
         toks_np = np.asarray(toks)          # ONE host sync per chunk
         done_np = np.asarray(done)
         n_np = np.asarray(n_valid)
+        failed_np = np.asarray(failed)
         self.stats["chunk_seconds"].append(time.perf_counter() - t0)
         self.stats["decode_dispatches"] += 1
-        if self.spec != "off":
+        # watchdog: chunk dispatches slower than threshold x the wall-time
+        # EMA are straggler events; `shed_after` consecutive events shed one
+        # load level (speculation -> off, then chunk halved)
+        if self._straggler.step_end(idx) is not None:
+            self.stats["straggler_events"] += 1
+            self._pressure += 1
+            if self._pressure >= self.shed_after:
+                self._shed()
+                self._pressure = 0
+        else:
+            self._pressure = 0
+        if spec_live:
             # accepted-length stats over live iterations of active slots only
             # (free/retired slots ride the fused chunk and emit garbage rows)
             acc_np = np.asarray(acc)[sorted(self._active)]
@@ -588,11 +880,23 @@ class ServeEngine:
                 self._retire(slot, "eos")
             elif len(st.produced) >= st.cap:
                 self._retire(slot, "length")
+            elif bool(failed_np[slot]):
+                # finite guard tripped on device: quarantine exactly this
+                # slot — n_valid stopped at the last token sampled from
+                # finite logits, so `produced` is the clean prefix
+                self._retire(slot, "error", reason=ErrorReason.NAN_LOGITS,
+                             error=f"non-finite logits after "
+                                   f"{len(st.produced)} tokens; slot "
+                                   "quarantined")
         return bool(self._active or self._queue)
 
-    def _retire(self, slot: int, reason: str) -> None:
+    def _retire(self, slot: int, finish: str, *,
+                reason: Optional[ErrorReason] = None,
+                error: Optional[str] = None) -> None:
         st = self._active.pop(slot)
         self._free.append(slot)
+        self._arm_np[slot] = -1
+        self._reserved_total -= self._reserved.pop(slot, 0)
         if self.paged:
             for phys in self._host_table[slot]:
                 if phys:
@@ -600,21 +904,148 @@ class ServeEngine:
             self._host_table[slot] = 0
             # device table -> trash page: the retired slot keeps riding the
             # fused decode until reused, and its stale writes must not land
-            # in pages the allocator may hand to someone else
-            self.cache = self._clear_slot(self.cache, jnp.int32(slot))
+            # in pages the allocator may hand to someone else (skipped when
+            # the engine is dead — the cache buffers may be gone)
+            if not self._dead:
+                self.cache = self._clear_slot(self.cache, jnp.int32(slot))
             self._refresh_page_stats()
         self.stats["tokens_out"] += len(st.produced)
-        self.completions.append(Completion(
-            uid=st.request.uid, tokens=np.asarray(st.produced, np.int32),
-            finish_reason=reason))
+        uid = st.request.uid
+        self._deadline_at.pop(uid, None)
+        produced = st.produced
+        pre = self._resume_prefix.pop(uid, None)
+        if pre:
+            # restored request: tokens produced before the preemption were
+            # re-prefilled as prompt suffix; the completion carries the full
+            # stream so restore is invisible to callers
+            produced = pre + produced
+        if finish == "error":
+            self._error(uid, produced, reason or ErrorReason.STEP_FAILURE,
+                        error or "unknown failure")
+        else:
+            self.completions.append(Completion(
+                uid=uid, tokens=np.asarray(produced, np.int32),
+                finish_reason=finish))
 
-    def run(self, requests: Optional[List[Request]] = None) -> List[Completion]:
-        """Drain the queue (plus ``requests``); returns all completions."""
+    def _fail_all(self, msg: str) -> None:
+        """Unrecoverable dispatch failure: every in-flight and queued request
+        completes with a typed ``step_failure`` error (partial tokens for
+        active slots) and the engine goes dead — the exactly-one-Completion
+        invariant survives even a poisoned jit."""
+        self._dead = True
+        for slot in list(self._active):
+            self._retire(slot, "error", reason=ErrorReason.STEP_FAILURE,
+                         error=msg)
+        while self._queue:
+            req = self._queue.popleft()
+            self._error(req.uid, (), ErrorReason.STEP_FAILURE, msg)
+
+    def _shed(self) -> None:
+        """Load shedding, one level per call: (1) speculation off, (2) chunk
+        halved (repeatable down to 1 token/dispatch). Greedy token streams
+        are byte-identical across levels — the degraded program resumes from
+        the same per-slot cache/pos/tok state at the chunk boundary — so
+        shedding trades only latency mechanics, never output."""
+        if self._spec_live != "off":
+            self._spec_live = "off"
+        elif self._chunk_live > 1:
+            self._chunk_live = max(self._chunk_live // 2, 1)
+        else:
+            return
+        self.stats["shed_events"] += 1
+        gen_fn = make_generate_step(
+            self.model, self.plan, chunk=self._chunk_live,
+            temperature=self._temperature, top_k=self._top_k,
+            spec="off", spec_k=0, logits_hook=self._hook)
+        self._gen_shed = jax.jit(
+            gen_fn, donate_argnums=(1,),
+            out_shardings=(self._cache_sh,) + (self._rep,) * 6)
+
+    # -- checkpoint / restore ------------------------------------------------
+    def snapshot(self) -> Dict[str, Any]:
+        """JSON-serializable serving state for a ``RestartManifest``: every
+        not-yet-completed request (queued, or mid-decode with the tokens
+        produced so far) plus the completions already emitted. Device state
+        is deliberately NOT captured — restore re-prefills — so checkpoints
+        stay tiny and layout/mesh-agnostic."""
+        def entry(req: Request, produced: List[int]) -> Dict[str, Any]:
+            toks = np.asarray(req.tokens, np.int32).reshape(-1).tolist()
+            pre = self._resume_prefix.get(req.uid)
+            if pre:      # already-restored request: split back to original
+                produced = list(pre) + produced
+                toks = toks[:len(toks) - len(pre)]
+            d = {"uid": req.uid, "tokens": toks,
+                 "max_new_tokens": int(req.max_new_tokens) + (len(pre or ())),
+                 "produced": [int(x) for x in produced]}
+            if req.deadline_ms is not None:
+                d["deadline_ms"] = float(req.deadline_ms)
+            return d
+
+        return {
+            "seed": self.seed,
+            "temperature": self._temperature,
+            "queued": [entry(r, []) for r in self._queue],
+            "active": [entry(self._active[s].request,
+                             list(self._active[s].produced))
+                       for s in sorted(self._active)],
+            "completions": [
+                {"uid": c.uid, "tokens": np.asarray(c.tokens).tolist(),
+                 "finish_reason": c.finish_reason, "error": c.error,
+                 "reason": c.reason}
+                for c in self.completions],
+        }
+
+    def load_snapshot(self, snap: Dict[str, Any],
+                      resume: Optional[bool] = None) -> None:
+        """Restore a :meth:`snapshot`: completions replay verbatim; queued
+        and in-flight requests are resubmitted. With ``resume`` (default:
+        paged layout + greedy sampling) an in-flight request re-prefills
+        ``prompt + produced`` and decodes only the remainder — sound in the
+        paged layout because right-padded prefill positions are
+        bucket-independent, so the committed tokens reproduce the exact
+        decode-time positions (the engine's ``prompt_len`` must fit the
+        grown prompts). The contiguous layout left-pads to the bucket
+        (absolute positions shift with prompt length), so it regenerates
+        from scratch instead — greedy completions are byte-identical to an
+        uninterrupted run either way."""
+        if resume is None:
+            resume = self.paged and self._temperature <= 0
+        for c in snap.get("completions", ()):
+            self.completions.append(Completion(
+                uid=c["uid"], tokens=np.asarray(c["tokens"], np.int32),
+                finish_reason=c["finish_reason"], error=c.get("error"),
+                reason=c.get("reason")))
+        for d in list(snap.get("queued", ())) + list(snap.get("active", ())):
+            produced = [int(x) for x in d.get("produced") or ()]
+            prompt = [int(x) for x in d["tokens"]]
+            if resume and produced:
+                self._resume_prefix[d["uid"]] = produced
+                req = Request(
+                    uid=d["uid"],
+                    tokens=np.asarray(prompt + produced, np.int32),
+                    max_new_tokens=d["max_new_tokens"] - len(produced),
+                    deadline_ms=d.get("deadline_ms"))
+            else:
+                req = Request(uid=d["uid"],
+                              tokens=np.asarray(prompt, np.int32),
+                              max_new_tokens=d["max_new_tokens"],
+                              deadline_ms=d.get("deadline_ms"))
+            self.submit(req)
+
+    def run(self, requests: Optional[List[Request]] = None, *,
+            stop: Optional[Callable[[], bool]] = None) -> List[Completion]:
+        """Drain the queue (plus ``requests``); returns all completions.
+
+        ``stop`` is polled between chunks (e.g. a PreemptionHandler's
+        ``requested`` flag): when it fires, draining halts at the chunk
+        boundary with in-flight state intact — call :meth:`snapshot` next.
+        """
         for r in requests or ():
             self.submit(r)
         t0 = time.perf_counter()
         while self.step():
-            pass
+            if stop is not None and stop():
+                break
         # stats are cumulative across run() calls (the engine is reusable)
         self.stats["wall_seconds"] += time.perf_counter() - t0
         self.stats["tokens_per_second"] = self.stats["tokens_out"] / max(
@@ -630,6 +1061,11 @@ class ServeEngine:
                 self.stats["spec_emitted_tokens"]
                 / max(self.stats["spec_draft_iters"], 1))
         return self.completions
+
+    @property
+    def chaos_events(self) -> List[Dict[str, Any]]:
+        """Injection log of the attached chaos harness ([] when unarmed)."""
+        return [] if self._chaos is None else list(self._chaos.events)
 
     def compile_cache_size(self) -> Optional[int]:
         """Compiled-program count of the fused generate step (1 after warmup

@@ -16,8 +16,9 @@ from __future__ import annotations
 
 import argparse
 import os
+import signal
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +26,19 @@ import numpy as np
 
 from repro.configs import ALL_IDS, ShapeConfig, get_config
 from repro.core.mimdram import plan_sharding, use_plan
+from repro.distributed.chaos import ChaosConfig
+from repro.distributed.fault_tolerance import (PreemptionHandler,
+                                               RestartManifest)
 from repro.launch import mesh as mesh_lib
 from repro.launch.engine import Request, ServeEngine
 from repro.launch.steps import (make_decode_step, make_serving_jits,
                                 sample_tokens, spec_config)
 from repro.models import build_model, init_params
+
+# env knobs captured into (and replayed from) a serving RestartManifest so a
+# restarted process traces the same cache layout / kernels / drafter
+_SERVE_ENV_KNOBS = ("REPRO_KV_PAGES", "REPRO_KV_QUANT", "REPRO_SPEC_DECODE",
+                    "REPRO_SPEC_K", "REPRO_ATTN_IMPL")
 
 
 def _clone(tree):
@@ -144,8 +153,8 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         acc_sum = acc_iters = 0
         while min(len(r) for r in rows) < gen:
             ts = time.perf_counter()
-            cache, tok, gkey, _done, n_valid, toks_d, hist, hist_len, acc = \
-                generate(params, cache, tok, gkey, eos, hist, hist_len)
+            (cache, tok, gkey, _done, n_valid, toks_d, hist, hist_len, acc,
+             _failed) = generate(params, cache, tok, gkey, eos, hist, hist_len)
             tb = np.asarray(toks_d)                     # host sync, per chunk
             nv = np.asarray(n_valid)
             live = np.asarray(acc)[np.asarray(acc) >= 0]
@@ -161,7 +170,7 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
         chunks: List[np.ndarray] = []
         for _ in range(n_chunks):
             ts = time.perf_counter()
-            cache, tok, gkey, _done, _n, toks_d = generate(
+            cache, tok, gkey, _done, _n, toks_d, _failed = generate(
                 params, cache, tok, gkey, eos)
             chunks.append(np.asarray(toks_d))           # host sync, per chunk
             dispatches += 1
@@ -185,21 +194,15 @@ def serve(arch: str, *, smoke: bool = True, batch: int = 4,
     return out
 
 
-def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
-                requests: int = 10, prompt_len: int = 32, gen: int = 16,
-                chunk: int = 8, seed: int = 0, temperature: float = 0.0,
-                top_k: int = 0, shared_prefix: int = 0,
-                repeat_period: int = 0, spec: Optional[str] = None,
-                spec_k: Optional[int] = None) -> ServeEngine:
-    """Continuous batching: drain a queue of mixed-length synthetic requests
-    through a :class:`ServeEngine`; returns the drained engine (stats +
-    completions). ``shared_prefix > 0`` gives every request the same first
-    tokens (a common system prompt) — with the paged cache, concurrent slots
-    then hash-cons their full prefix pages instead of duplicating them.
-    ``repeat_period > 0`` tiles each prompt from a short per-request period
-    (the lookup-friendly repetitive-suffix workload for the n-gram drafter);
-    ``spec``/``spec_k`` select the speculative-decoding drafter (default:
-    the env knobs)."""
+def make_queue_engine(arch: str, *, smoke: bool = True, slots: int = 4,
+                      prompt_len: int = 32, gen: int = 16, chunk: int = 8,
+                      seed: int = 0, temperature: float = 0.0, top_k: int = 0,
+                      spec: Optional[str] = None, spec_k: Optional[int] = None,
+                      **engine_kwargs: Any) -> ServeEngine:
+    """Build a fresh :class:`ServeEngine` for ``arch`` (shared by queue mode,
+    the chaos smokes, and checkpoint/restore). ``engine_kwargs`` forwards the
+    robustness knobs (``max_queue``, ``deadline_ms``, ``chaos``,
+    ``page_pool_pages``, ...)."""
     cfg = get_config(arch, smoke=smoke)
     mesh = mesh_lib.make_local_mesh(("data",))
     plan = plan_sharding(
@@ -207,9 +210,20 @@ def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
     model = build_model(cfg)
     with use_plan(plan):
         params = init_params(model.param_specs(), jax.random.PRNGKey(seed))
-    eng = ServeEngine(model, params, plan, slots=slots, prompt_len=prompt_len,
-                      max_new=gen, chunk=chunk, temperature=temperature,
-                      top_k=top_k, seed=seed, spec=spec, spec_k=spec_k)
+    return ServeEngine(model, params, plan, slots=slots, prompt_len=prompt_len,
+                       max_new=gen, chunk=chunk, temperature=temperature,
+                       top_k=top_k, seed=seed, spec=spec, spec_k=spec_k,
+                       **engine_kwargs)
+
+
+def synth_requests(arch: str, *, smoke: bool = True, requests: int = 10,
+                   prompt_len: int = 32, gen: int = 16, seed: int = 0,
+                   shared_prefix: int = 0,
+                   repeat_period: int = 0) -> List[Request]:
+    """The synthetic mixed-length request stream used by queue mode — kept
+    separate from the engine so a restore-verify run can rebuild the exact
+    same queue the preempted process was draining."""
+    cfg = get_config(arch, smoke=smoke)
     rng = np.random.default_rng(seed)
     prefix = rng.integers(1, cfg.vocab_size, shared_prefix).astype(np.int32)
     reqs = []
@@ -225,8 +239,151 @@ def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
         reqs.append(Request(
             uid=i, tokens=toks,
             max_new_tokens=int(rng.integers(max(gen // 2, 1), gen + 1))))
-    eng.run(reqs)
+    return reqs
+
+
+def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
+                requests: int = 10, prompt_len: int = 32, gen: int = 16,
+                chunk: int = 8, seed: int = 0, temperature: float = 0.0,
+                top_k: int = 0, shared_prefix: int = 0,
+                repeat_period: int = 0, spec: Optional[str] = None,
+                spec_k: Optional[int] = None,
+                max_queue: Optional[int] = None,
+                deadline_ms: Optional[float] = None,
+                chaos: Optional[ChaosConfig] = None,
+                page_pool_pages: Optional[int] = None,
+                stop: Optional[Callable[[ServeEngine], bool]] = None,
+                ) -> ServeEngine:
+    """Continuous batching: drain a queue of mixed-length synthetic requests
+    through a :class:`ServeEngine`; returns the drained engine (stats +
+    completions). ``shared_prefix > 0`` gives every request the same first
+    tokens (a common system prompt) — with the paged cache, concurrent slots
+    then hash-cons their full prefix pages instead of duplicating them.
+    ``repeat_period > 0`` tiles each prompt from a short per-request period
+    (the lookup-friendly repetitive-suffix workload for the n-gram drafter);
+    ``spec``/``spec_k`` select the speculative-decoding drafter (default:
+    the env knobs). Robustness knobs: ``max_queue`` bounds the admission
+    queue, ``deadline_ms`` retires overdue requests, ``chaos`` arms seeded
+    fault injection, ``page_pool_pages`` shrinks the paged-cache pool, and
+    ``stop(engine)`` halts the drain early (preemption)."""
+    eng = make_queue_engine(
+        arch, smoke=smoke, slots=slots, prompt_len=prompt_len, gen=gen,
+        chunk=chunk, seed=seed, temperature=temperature, top_k=top_k,
+        spec=spec, spec_k=spec_k, max_queue=max_queue, deadline_ms=deadline_ms,
+        chaos=chaos, page_pool_pages=page_pool_pages)
+    reqs = synth_requests(arch, smoke=smoke, requests=requests,
+                          prompt_len=prompt_len, gen=gen, seed=seed,
+                          shared_prefix=shared_prefix,
+                          repeat_period=repeat_period)
+    eng.run(reqs, stop=(lambda: stop(eng)) if stop is not None else None)
     return eng
+
+
+def save_serve_manifest(path: str, eng: ServeEngine, *, arch: str,
+                        smoke: bool, slots: int, prompt_len: int, gen: int,
+                        chunk: int,
+                        queue: Optional[Dict[str, Any]] = None) -> None:
+    """Write a serving :class:`RestartManifest`: the engine snapshot plus the
+    engine/env config a restarted process needs to rebuild identical jits."""
+    snap = eng.snapshot()
+    snap["engine"] = {
+        "arch": arch, "smoke": smoke, "slots": slots,
+        "prompt_len": prompt_len, "gen": gen, "chunk": chunk,
+        "top_k": eng._top_k, "spec": eng.spec, "spec_k": eng.spec_k,
+        "env": {k: os.environ[k] for k in _SERVE_ENV_KNOBS
+                if k in os.environ},
+    }
+    if queue is not None:
+        snap["engine"]["queue"] = queue
+    RestartManifest(
+        step=eng.stats["decode_dispatches"], checkpoint_dir="",
+        mesh_shape=[jax.device_count()], mesh_axes=["data"],
+        data_seed=eng.seed, arch=arch, shape="serve",
+        straggler_events=list(eng._straggler.flagged), serve=snap,
+    ).save(path)
+
+
+def restore_serve(path: str) -> ServeEngine:
+    """Rebuild a :class:`ServeEngine` from a serving manifest and drain it.
+
+    Env knobs recorded at snapshot time are replayed before tracing so the
+    restored process uses the same cache layout / kernels / drafter. With the
+    paged cache, in-flight requests resume from ``prompt + produced`` (page
+    positions are bucket-independent); the contiguous layout regenerates from
+    the original prompt. Both drain to byte-identical greedy completions.
+    """
+    man = RestartManifest.load(path)
+    assert man.serve is not None, f"{path}: not a serving manifest"
+    snap = man.serve
+    ecfg = snap["engine"]
+    for k, v in ecfg.get("env", {}).items():
+        os.environ[k] = v
+    prompt_len = ecfg["prompt_len"]
+    if os.environ.get("REPRO_KV_PAGES", "0") not in ("", "0"):
+        # paged resume re-prefills prompt + produced; the prompt bucket must
+        # fit the longest such prefix (positions are true, so growing the
+        # bucket cannot change surviving tokens)
+        need = max((len(d["tokens"]) + len(d.get("produced", []))
+                    for d in snap.get("queued", []) + snap.get("active", [])),
+                   default=0)
+        prompt_len = max(prompt_len, need)
+    eng = make_queue_engine(
+        ecfg["arch"], smoke=ecfg["smoke"], slots=ecfg["slots"],
+        prompt_len=prompt_len, gen=ecfg["gen"], chunk=ecfg["chunk"],
+        seed=snap["seed"], temperature=snap["temperature"],
+        top_k=ecfg.get("top_k", 0), spec=ecfg.get("spec"),
+        spec_k=ecfg.get("spec_k"))
+    eng.load_snapshot(snap)
+    eng.run()
+    return eng
+
+
+def _print_queue_stats(eng: ServeEngine) -> None:
+    s = eng.stats
+    print(f"{len(eng.completions)} requests, {s['tokens_out']} tokens in "
+          f"{s['wall_seconds']:.2f}s ({s['tokens_per_second']:.1f} tok/s, "
+          f"{s['dispatches_per_token']:.3f} dispatches/token, "
+          f"{s['prefills']} prefills)")
+    print(f"kv: {s['kv_hbm_bytes_peak'] / 1e6:.2f} MB peak "
+          f"({s['kv_bytes_per_token']:.0f} B/token"
+          + (f", {s['kv_pages_peak']} pages peak, "
+             f"{s['prefix_hits']} prefix hits" if eng.paged else "")
+          + ")")
+    if eng.spec != "off":
+        print(f"spec: mode={eng.spec} k={eng.spec_k} accepted_len/draft="
+              f"{s['spec_accepted_len_per_draft']:.3f} "
+              f"accept hist={s['spec_accept_hist']}")
+    robust = (s["error_completions"] or s["deadline_miss"] or s["retries"]
+              or s["shed_events"] or s["admission_blocked"]
+              or eng.chaos_events)
+    if robust:
+        print(f"robust: {s['error_completions']} error completions "
+              f"({s['deadline_miss']} deadline misses), "
+              f"{s['retries']} retries, {s['shed_events']} shed events, "
+              f"{s['straggler_events']} stragglers, "
+              f"{s['admission_blocked']} admission stalls, "
+              f"queue peak {s['queue_peak']}, "
+              f"{len(eng.chaos_events)} chaos events")
+
+
+def _assert_identical(eng: ServeEngine, ref: ServeEngine, label: str,
+                      skip_uids=()) -> int:
+    """Assert ``eng``'s non-error completions match ``ref`` byte-for-byte
+    (minus ``skip_uids``); returns how many were compared."""
+    got = {c.uid: c for c in eng.completions}
+    want = sorted(c.uid for c in ref.completions)
+    assert sorted(got) == want, (
+        f"{label}: completion uids {sorted(got)} != {want}")
+    checked = 0
+    for c in ref.completions:
+        g = got[c.uid]
+        if g.finish_reason == "error" or c.uid in skip_uids:
+            continue
+        assert list(np.asarray(g.tokens)) == list(np.asarray(c.tokens)), (
+            f"{label} mismatch on uid={c.uid}: "
+            f"{np.asarray(g.tokens)} != {np.asarray(c.tokens)}")
+        checked += 1
+    return checked
 
 
 def main() -> None:
@@ -271,6 +428,36 @@ def main() -> None:
                     help="queue mode: re-drain the identical queue with "
                     "speculation forced off and assert byte-identical "
                     "completions (greedy identity gate)")
+    ap.add_argument("--max-queue", type=int, default=None,
+                    help="queue mode: bound the admission queue; submissions "
+                    "beyond it get a queue_full error Completion")
+    ap.add_argument("--deadline-ms", type=float, default=None,
+                    help="queue mode: per-request deadline; overdue requests "
+                    "retire with a deadline error Completion")
+    ap.add_argument("--page-pool-pages", type=int, default=None,
+                    help="queue mode: physical page budget for the paged "
+                    "cache pool (default slots * pages-per-slot)")
+    ap.add_argument("--chaos-seed", type=int, default=None,
+                    help="queue mode: arm seeded fault injection; plan comes "
+                    "from REPRO_CHAOS (e.g. 'nan=1,slow=2,fail=1,pages=4') "
+                    "or defaults to nan=1,slow=1,fail=1")
+    ap.add_argument("--chaos-verify", action="store_true",
+                    help="queue mode: re-drain the identical queue without "
+                    "chaos and assert fault-free survivors are "
+                    "byte-identical")
+    ap.add_argument("--preempt-after", type=int, default=None,
+                    help="queue mode: raise SIGTERM after N chunk dispatches "
+                    "and checkpoint in-flight state to --snapshot "
+                    "(exercises the real signal path)")
+    ap.add_argument("--snapshot", default="serve_manifest.json",
+                    help="manifest path written on preemption (SIGTERM or "
+                    "--preempt-after)")
+    ap.add_argument("--restore", default=None,
+                    help="restore a serving manifest and drain the remaining "
+                    "requests (implies queue mode)")
+    ap.add_argument("--restore-verify", action="store_true",
+                    help="with --restore: also run the original queue "
+                    "uninterrupted and assert byte-identical completions")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
     if args.attn_impl:
@@ -283,43 +470,78 @@ def main() -> None:
         os.environ["REPRO_SPEC_DECODE"] = args.spec_decode
     if args.spec_k is not None:
         os.environ["REPRO_SPEC_K"] = str(args.spec_k)
+    if args.restore:
+        eng = restore_serve(args.restore)
+        _print_queue_stats(eng)
+        if args.restore_verify:
+            man = RestartManifest.load(args.restore)
+            e, q = man.serve["engine"], man.serve["engine"].get("queue")
+            assert q, "--restore-verify needs a manifest saved by queue mode"
+            ref = serve_queue(
+                e["arch"], smoke=e["smoke"], slots=e["slots"],
+                requests=q["requests"], prompt_len=e["prompt_len"],
+                gen=e["gen"], chunk=e["chunk"], seed=man.serve["seed"],
+                temperature=man.serve["temperature"], top_k=e.get("top_k", 0),
+                shared_prefix=q.get("shared_prefix", 0),
+                repeat_period=q.get("repeat_period", 0))
+            n = _assert_identical(eng, ref, "restore-verify")
+            print(f"restore-verify: {n} completions byte-identical with an "
+                  "uninterrupted drain")
+        return
     if args.mode == "queue":
-        eng = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
-                          requests=args.requests, prompt_len=args.prompt_len,
-                          gen=args.gen, chunk=args.chunk,
-                          temperature=args.temperature, top_k=args.top_k,
-                          shared_prefix=args.shared_prefix,
-                          repeat_period=args.repeat_period)
-        s = eng.stats
-        print(f"{len(eng.completions)} requests, {s['tokens_out']} tokens in "
-              f"{s['wall_seconds']:.2f}s ({s['tokens_per_second']:.1f} tok/s, "
-              f"{s['dispatches_per_token']:.3f} dispatches/token, "
-              f"{s['prefills']} prefills)")
-        print(f"kv: {s['kv_hbm_bytes_peak'] / 1e6:.2f} MB peak "
-              f"({s['kv_bytes_per_token']:.0f} B/token"
-              + (f", {s['kv_pages_peak']} pages peak, "
-                 f"{s['prefix_hits']} prefix hits" if eng.paged else "")
-              + ")")
-        if eng.spec != "off":
-            print(f"spec: mode={eng.spec} k={eng.spec_k} accepted_len/draft="
-                  f"{s['spec_accepted_len_per_draft']:.3f} "
-                  f"accept hist={s['spec_accept_hist']}")
+        chaos = ChaosConfig.from_env(args.chaos_seed)
+        if chaos is None and args.chaos_seed is not None:
+            chaos = ChaosConfig.parse("nan=1,slow=1,fail=1",
+                                      seed=args.chaos_seed)
+        handler = stop = None
+        if args.preempt_after is not None:
+            handler = PreemptionHandler().install()
+
+            def stop(e, _h=handler):
+                if (not _h.requested and
+                        e.stats["decode_dispatches"] >= args.preempt_after):
+                    os.kill(os.getpid(), signal.SIGTERM)
+                return _h.requested
+
+        queue_kw = dict(
+            smoke=args.smoke, slots=args.slots, requests=args.requests,
+            prompt_len=args.prompt_len, gen=args.gen, chunk=args.chunk,
+            temperature=args.temperature, top_k=args.top_k,
+            shared_prefix=args.shared_prefix,
+            repeat_period=args.repeat_period)
+        eng = serve_queue(args.arch, max_queue=args.max_queue,
+                          deadline_ms=args.deadline_ms, chaos=chaos,
+                          page_pool_pages=args.page_pool_pages, stop=stop,
+                          **queue_kw)
+        _print_queue_stats(eng)
+        if handler is not None:
+            handler.uninstall()
+            if handler.requested:
+                save_serve_manifest(
+                    args.snapshot, eng, arch=args.arch, smoke=args.smoke,
+                    slots=args.slots, prompt_len=args.prompt_len,
+                    gen=args.gen, chunk=args.chunk,
+                    queue={"requests": args.requests,
+                           "shared_prefix": args.shared_prefix,
+                           "repeat_period": args.repeat_period})
+                print(f"preempted after {eng.stats['decode_dispatches']} "
+                      f"chunks: {len(eng.completions)}/{args.requests} done, "
+                      f"manifest -> {args.snapshot}")
+                return
+        if args.chaos_verify and chaos is not None:
+            ref = serve_queue(args.arch, **queue_kw)
+            poisoned = {ev["uid"] for ev in eng.chaos_events
+                        if ev["kind"] == "nan"}
+            n = _assert_identical(eng, ref, "chaos-verify",
+                                  skip_uids=poisoned)
+            print(f"chaos-verify: {n}/{len(eng.completions)} fault-free "
+                  f"survivors byte-identical "
+                  f"({len(eng.chaos_events)} injected events)")
         if args.spec_verify and eng.spec != "off":
-            ref = serve_queue(args.arch, smoke=args.smoke, slots=args.slots,
-                              requests=args.requests,
-                              prompt_len=args.prompt_len,
-                              gen=args.gen, chunk=args.chunk,
-                              temperature=args.temperature, top_k=args.top_k,
-                              shared_prefix=args.shared_prefix,
-                              repeat_period=args.repeat_period, spec="off")
-            got_by_uid = {c.uid: c.tokens for c in eng.completions}
-            for c in ref.completions:
-                got = got_by_uid[c.uid]
-                assert list(got) == list(c.tokens), (
-                    f"spec-verify mismatch on uid={c.uid}: "
-                    f"{got} != {c.tokens}")
-            print(f"spec-verify: {len(ref.completions)} completions "
-                  "byte-identical with speculation off")
+            ref = serve_queue(args.arch, spec="off", **queue_kw)
+            n = _assert_identical(eng, ref, "spec-verify")
+            print(f"spec-verify: {n} completions byte-identical with "
+                  "speculation off")
         return
     out = serve(args.arch, smoke=args.smoke, batch=args.batch,
                 prompt_len=args.prompt_len, gen=args.gen, chunk=args.chunk,

@@ -21,6 +21,7 @@ from repro.configs.base import ModelConfig, RunConfig, ShapeConfig
 from repro.core import proteus
 from repro.core.mimdram import Plan, plan_sharding, use_plan
 from repro.launch import specs as specs_lib
+from repro.models import layers
 from repro.models import module as mod
 from repro.optim import Optimizer
 
@@ -282,7 +283,8 @@ def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
                       temperature: float = 0.0, top_k: int = 0,
                       full_logits: bool = False,
                       spec: Optional[str] = None,
-                      spec_k: Optional[int] = None):
+                      spec_k: Optional[int] = None,
+                      logits_hook=None):
     """Sharding-pinned (prefill, generate, rep, cache_sh) for one serving cell.
 
     Cache (and fed-back token/key) shardings are pinned identically on both
@@ -298,6 +300,11 @@ def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
     and ``generate`` takes/returns the drafter history (see
     :func:`make_generate_step`), with the history buffers donated alongside
     the cache.
+
+    ``logits_hook`` (see :func:`make_generate_step`) adds a trailing traced
+    ``arm`` operand to ``generate`` — the chaos harness's NaN-injection
+    point. The hook is trace-time only; arming is per-dispatch data, so one
+    compiled program serves both poisoned and clean chunks.
     """
     spec, spec_k = spec_config(model, spec, spec_k)
     if plan.mesh is not None:
@@ -311,19 +318,21 @@ def make_serving_jits(model, plan: Plan, *, max_len: int, chunk: int,
                       out_shardings=(None, cache_sh))
     gen_fn = make_generate_step(model, plan, chunk=chunk,
                                 temperature=temperature, top_k=top_k,
-                                spec=spec, spec_k=spec_k)
+                                spec=spec, spec_k=spec_k,
+                                logits_hook=logits_hook)
     if spec == "off":
         generate = jax.jit(gen_fn, donate_argnums=(1,),
-                           out_shardings=(cache_sh, rep, rep, rep, rep, rep))
+                           out_shardings=(cache_sh,) + (rep,) * 6)
     else:
         generate = jax.jit(gen_fn, donate_argnums=(1, 5, 6),
-                           out_shardings=(cache_sh,) + (rep,) * 8)
+                           out_shardings=(cache_sh,) + (rep,) * 9)
     return prefill, generate, rep, cache_sh
 
 
 def make_generate_step(model, plan: Plan, *, chunk: int,
                        temperature: float = 0.0, top_k: int = 0,
-                       spec: str = "off", spec_k: int = 0):
+                       spec: str = "off", spec_k: int = 0,
+                       logits_hook=None):
     """Fused decode loop: ``chunk`` iterations per dispatch via ``lax.scan``.
 
     The per-token serving loop pays one jit dispatch + one host sync per
@@ -332,7 +341,7 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
     so the cache is updated in place (no second live copy).
 
         generate_step(params, cache, tok, key, eos_id)
-            -> (cache, tok, key, done, n_valid, toks)
+            -> (cache, tok, key, done, n_valid, toks, failed)
 
     ``tok`` (B, 1) is the next token to feed (from prefill argmax or the
     previous chunk); ``toks`` (B, chunk) are the emitted tokens, the first
@@ -345,6 +354,22 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
     deterministic) and ``n_valid`` (B,) counts the tokens up to and including
     EOS. The engine retires slots from ``(done, n_valid)`` without scanning
     token buffers on the host.
+
+    ``failed`` (B,) is the on-device finite guard: True once a slot's logits
+    go non-finite. Slots are independent through the whole decode stack, so
+    the guard quarantines exactly the poisoned slot — its counting stops with
+    the last token sampled from finite logits (already counted in
+    ``n_valid``), its re-feed freezes like a done slot, and every other slot
+    keeps decoding bit-identically. The engine retires failed slots with an
+    error completion instead of poisoning the batch.
+
+    ``logits_hook`` — ``hook(logits, row_pos, arm) -> logits`` with
+    ``row_pos`` (B, S) the absolute cache position of each logits row — is
+    the chaos harness's deterministic NaN-injection point, applied where a
+    real model overflow would appear (before the guard and the sampler).
+    When set, the jit takes a trailing traced ``arm`` (B,) int32 operand
+    (poison position per slot, -1 disarmed) so one compiled program covers
+    armed and clean dispatches.
 
     Speculative decoding (``spec="ngram"|"draft"``, draft length ``spec_k``)
     keeps the same chunked scan — still ONE dispatch per chunk — but each
@@ -360,7 +385,8 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
     tokens, ``hist_len`` (B,)) and the per-iteration accept counts:
 
         generate_step(params, cache, tok, key, eos_id, hist, hist_len)
-            -> (cache, tok, key, done, n_valid, toks, hist, hist_len, acc)
+            -> (cache, tok, key, done, n_valid, toks, hist, hist_len, acc,
+                failed)
 
     ``toks`` is a compacted (B, chunk*(k+1)) buffer — the first ``n_valid``
     entries per row are the emitted tokens, so callers consume it exactly
@@ -373,27 +399,35 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
     drafter but follows a different key schedule than the per-token loop.
     """
     if spec == "off":
-        def generate_step(params, cache, tok, key, eos_id):
+        def generate_step(params, cache, tok, key, eos_id, arm=None):
             with use_plan(plan):
                 B = tok.shape[0]
 
                 def body(carry, _):
-                    cache, tok, key, done, n_valid = carry
+                    cache, tok, key, done, n_valid, failed = carry
                     emitted = tok[:, 0]
                     done_now = done | (emitted == eos_id)
-                    n_valid = n_valid + jnp.where(done, 0, 1).astype(jnp.int32)
+                    n_valid = n_valid + jnp.where(done | failed, 0,
+                                                  1).astype(jnp.int32)
+                    pos0 = cache["pos"]
                     logits, cache = model.decode_step(params, cache, tok)
+                    if logits_hook is not None:
+                        logits = logits_hook(logits, pos0[:, None], arm)
+                    fin = layers.slot_isfinite(logits)
+                    failed_now = failed | (~fin & ~done_now)
                     key, sub = jax.random.split(key)
                     nxt = sample_tokens(logits[:, -1], sub, temperature, top_k)
-                    nxt = jnp.where(done_now, emitted, nxt)  # freeze after EOS
-                    return (cache, nxt[:, None], key, done_now, n_valid), \
-                        emitted
+                    nxt = jnp.where(done_now | failed_now, emitted, nxt)
+                    return (cache, nxt[:, None], key, done_now, n_valid,
+                            failed_now), emitted
 
                 done0 = jnp.zeros((B,), bool)
                 n0 = jnp.zeros((B,), jnp.int32)
-                (cache, tok, key, done, n_valid), toks = jax.lax.scan(
-                    body, (cache, tok, key, done0, n0), None, length=chunk)
-            return cache, tok, key, done, n_valid, toks.T   # toks: (B, chunk)
+                f0 = jnp.zeros((B,), bool)
+                (cache, tok, key, done, n_valid, failed), toks = jax.lax.scan(
+                    body, (cache, tok, key, done0, n0, f0), None, length=chunk)
+            return (cache, tok, key, done, n_valid, toks.T,
+                    failed)                                 # toks: (B, chunk)
         return generate_step
 
     k = int(spec_k)
@@ -404,7 +438,8 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
                           or max(1, model.cfg.num_layers // 2))
         n_draft_layers = min(n_draft_layers, model.cfg.num_layers)
 
-    def generate_step(params, cache, tok, key, eos_id, hist, hist_len):
+    def generate_step(params, cache, tok, key, eos_id, hist, hist_len,
+                      arm=None):
         with use_plan(plan):
             B = tok.shape[0]
             Hcap = hist.shape[1]
@@ -413,7 +448,8 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
             idx = jnp.arange(span, dtype=jnp.int32)
 
             def body(carry, _):
-                cache, tok, key, done, n_valid, hist, hist_len, toks = carry
+                (cache, tok, key, done, n_valid, failed, hist, hist_len,
+                 toks) = carry
                 t0 = tok[:, 0]
                 if spec == "ngram":
                     drafts = ngram_draft(hist, hist_len, t0, k)
@@ -438,9 +474,20 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
                 blk = jnp.concatenate([tok, drafts], axis=1)   # (B, k+1)
                 pos0 = cache["pos"]
                 logits, cache = model.decode_step(params, cache, blk)
+                if logits_hook is not None:
+                    row_pos = pos0[:, None] + idx[None, :]
+                    logits = logits_hook(logits, row_pos, arm)
+                # per-row finite guard: row j's logits are the target for
+                # draft j+1 and the bonus after j accepts. Acceptance stops
+                # at the last finite target, so every committed token derives
+                # from finite logits; the iteration whose bonus row is the
+                # non-finite one quarantines the slot — exactly matching the
+                # non-spec loop's "last token counted, next token lost".
+                fin_row = jnp.isfinite(logits).all(axis=-1)    # (B, span)
                 key, sub = jax.random.split(key)
                 tgt = sample_tokens(logits, sub, temperature, top_k)
                 ok = (blk[:, 1:] == tgt[:, :-1]).astype(jnp.int32)
+                ok = ok * fin_row[:, :-1].astype(jnp.int32)
                 a = jnp.sum(jnp.cumprod(ok, axis=1), axis=1)   # 0..k accepted
                 # commit blk[:, :a+1], truncated at the first EOS (inclusive)
                 is_eos = blk == eos_id
@@ -449,7 +496,10 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
                 first_eos = jnp.min(
                     jnp.where(eos_hit, idx[None, :], span), axis=1)
                 cnt = jnp.where(any_eos, first_eos + 1, a + 1)
-                cnt = jnp.where(done, 0, cnt).astype(jnp.int32)
+                cnt = jnp.where(done | failed, 0, cnt).astype(jnp.int32)
+                bonus_fin = jnp.take_along_axis(
+                    fin_row, a[:, None], axis=1)[:, 0]
+                failed_now = failed | (~bonus_fin & ~any_eos & ~done)
                 # rollback = positional rewind: the next iteration's k+1-row
                 # write window starts at pos0+cnt, covering every rejected row
                 # before anything attends to it (done slots advance 1, like
@@ -458,25 +508,27 @@ def make_generate_step(model, plan: Plan, *, chunk: int,
                 cache = dict(cache, pos=pos0 + adv)
                 bonus = tgt[b, a]
                 nxt = jnp.where(any_eos, jnp.asarray(eos_id, t0.dtype), bonus)
-                nxt = jnp.where(done, t0, nxt)                 # freeze re-feed
+                nxt = jnp.where(done | failed_now, t0, nxt)    # freeze re-feed
                 wv = idx[None, :] < cnt[:, None]
                 tslot = jnp.where(wv, n_valid[:, None] + idx[None, :], Lbuf)
                 toks = toks.at[b[:, None], tslot].set(blk, mode="drop")
                 hslot = jnp.where(wv, hist_len[:, None] + idx[None, :], Hcap)
                 hist = hist.at[b[:, None], hslot].set(
                     blk.astype(hist.dtype), mode="drop")
-                acc_i = jnp.where(done, -1, cnt)
+                acc_i = jnp.where(done | failed, -1, cnt)
                 return (cache, nxt[:, None], key, done | any_eos,
-                        n_valid + cnt, hist, hist_len + cnt, toks), acc_i
+                        n_valid + cnt, failed_now, hist, hist_len + cnt,
+                        toks), acc_i
 
             done0 = jnp.zeros((B,), bool)
             n0 = jnp.zeros((B,), jnp.int32)
+            f0 = jnp.zeros((B,), bool)
             toks0 = jnp.zeros((B, Lbuf), tok.dtype)
-            carry0 = (cache, tok, key, done0, n0, hist, hist_len, toks0)
-            (cache, tok, key, done, n_valid, hist, hist_len, toks), acc = \
-                jax.lax.scan(body, carry0, None, length=chunk)
+            carry0 = (cache, tok, key, done0, n0, f0, hist, hist_len, toks0)
+            (cache, tok, key, done, n_valid, failed, hist, hist_len,
+             toks), acc = jax.lax.scan(body, carry0, None, length=chunk)
         return (cache, tok, key, done, n_valid, toks, hist, hist_len,
-                acc.T)                                         # acc: (B, chunk)
+                acc.T, failed)                                 # acc: (B, chunk)
     return generate_step
 
 

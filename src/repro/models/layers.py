@@ -100,6 +100,17 @@ def softcap(x: jax.Array, cap: float) -> jax.Array:
     return cap * jnp.tanh(x / cap)
 
 
+def slot_isfinite(logits: jax.Array) -> jax.Array:
+    """Per-slot finite guard for the fused decode scan: ``(B, ..., V)``
+    logits -> ``(B,)`` bool, True iff every logit the slot produced this
+    step is finite. Slots are independent through the whole decode stack
+    (per-sequence positions, per-slot cache rows), so a non-finite row
+    indicts exactly one slot and the engine can quarantine it without
+    touching the rest of the batch."""
+    B = logits.shape[0]
+    return jnp.all(jnp.isfinite(logits.reshape(B, -1)), axis=-1)
+
+
 def ring_cache_update(cache: jax.Array, new: jax.Array,
                       slot: jax.Array) -> jax.Array:
     """Write ``new`` (B, S, ...) into ``cache`` (B, T, ...) at per-row slots.

@@ -55,7 +55,7 @@ def test_generate_cache_donated():
     toks = jnp.zeros((2, 8), jnp.int32)
     _, cache = prefill(params, {"tokens": toks})
     k_in = cache["k"]
-    cache, tok, key, done, n_valid, out = generate(
+    cache, tok, key, done, n_valid, out, _failed = generate(
         params, cache, jnp.zeros((2, 1), jnp.int32), jax.random.PRNGKey(0),
         jnp.int32(-1))
     assert k_in.is_deleted(), "cache was copied, not donated"
@@ -155,16 +155,16 @@ def test_generate_step_on_device_eos():
 
     # first run with eos disabled to learn the greedy stream
     ref_cache = jax.tree_util.tree_map(jnp.copy, cache)
-    _, _, _, done, n, ref = generate(params, ref_cache, tok,
-                                     jax.random.PRNGKey(0), jnp.int32(-1))
+    _, _, _, done, n, ref, _ = generate(params, ref_cache, tok,
+                                        jax.random.PRNGKey(0), jnp.int32(-1))
     ref = np.asarray(ref)
     assert not np.asarray(done).any() and (np.asarray(n) == 8).all()
 
     # pick row 0's 4th greedy token as EOS and replay
     eos = int(ref[0, 3])
     stop = int(np.argmax(ref[0] == eos))            # first occurrence
-    _, _, _, done, n, out = generate(params, cache, tok,
-                                     jax.random.PRNGKey(0), jnp.int32(eos))
+    _, _, _, done, n, out, _ = generate(params, cache, tok,
+                                        jax.random.PRNGKey(0), jnp.int32(eos))
     out, done, n = np.asarray(out), np.asarray(done), np.asarray(n)
     assert done[0] and n[0] == stop + 1
     np.testing.assert_array_equal(out[0, :stop + 1], ref[0, :stop + 1])

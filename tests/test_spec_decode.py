@@ -119,7 +119,7 @@ def test_spec_generate_byte_identity(mode):
     key = jax.random.PRNGKey(0)
     outs = []
     for _ in range(gen // chunk):
-        cache, tok, key, done, n_valid, out = gen_off(
+        cache, tok, key, done, n_valid, out, _failed = gen_off(
             params, cache, tok, key, jnp.int32(-1))
         outs.append(np.asarray(out))
     ref = np.concatenate(outs, 1)
@@ -137,7 +137,8 @@ def test_spec_generate_byte_identity(mode):
     rows = [[] for _ in range(batch)]
     accs = []
     while min(len(r) for r in rows) < gen:
-        cache, tok, key, done, n_valid, tb, hist, hist_len, acc = gen_sp(
+        (cache, tok, key, done, n_valid, tb, hist, hist_len, acc,
+         _failed) = gen_sp(
             params, cache, tok, key, jnp.int32(-1), hist, hist_len)
         n, tb = np.asarray(n_valid), np.asarray(tb)
         accs.append(np.asarray(acc))
