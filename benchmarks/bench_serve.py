@@ -20,12 +20,14 @@ Emits into the standard ``benchmarks/run.py`` CSV; ``benchmarks/report.py
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 
 import numpy as np
 
-from repro.distributed.chaos import ChaosConfig
-from repro.launch.serve import serve, serve_queue
+from repro.distributed.chaos import ChaosConfig, ShardChaosConfig
+from repro.launch.serve import (make_fleet, serve, serve_fleet, serve_queue,
+                                synth_requests)
 
 # decoder LM, recurrent (RG-LRU hybrid), MoE — the three serving families
 CONFIGS = (
@@ -247,6 +249,105 @@ def run(emit) -> None:
         "chaos_soak: poisoned request did not error"
     assert survivor_match, \
         "chaos_soak: fault-free survivors diverge from chaos-free drain"
+
+    # Sharded serving fleet — scaling cell: the SAME mixed-length queue
+    # drained by 1 vs 2 ``mp`` worker shards (real spawned processes behind
+    # the dispatcher facade; periodic checkpoints disabled so the cell
+    # measures serving, not snapshot I/O). Both fleets are warmed with a
+    # disjoint uid range first, then counters reset, so compile time is
+    # excluded from tok/s. The scaling gate is conditional on the runner:
+    # on >= 2 cores (CI) two shards must beat one (scale_x > 1.0); on a
+    # single core parallel decode is physically impossible and the gate is
+    # only that the fleet facade + IPC costs < 25% (scale_x >= 0.75).
+    fl_kw = dict(smoke=True, slots=2, prompt_len=PROMPT, gen=16, chunk=4,
+                 seed=0)
+    fl_reqs = synth_requests("pimref-100m", smoke=True, requests=8,
+                             prompt_len=PROMPT, gen=16, seed=0)
+    fl_warm = [dataclasses.replace(r, uid=r.uid + 10_000) for r in fl_reqs]
+    cores = os.cpu_count() or 1
+    fl_tok_s = {}
+    for n in (1, 2):
+        fleet = make_fleet("pimref-100m", shards=n, backend="mp",
+                           checkpoint_every=1_000_000, **fl_kw)
+        try:
+            fleet.run(list(fl_warm))
+            fleet.reset_stats()
+            comps = fleet.run(list(fl_reqs))
+            uids = sorted(c.uid for c in comps if c.uid < 10_000)
+            assert uids == list(range(8)), \
+                f"fleet x{n}: requests lost or duplicated: {uids}"
+            assert fleet.stats["error_completions"] == 0, \
+                f"fleet x{n}: error completions in a fault-free drain"
+            fl_tok_s[n] = fleet.stats["tokens_per_second"]
+            if n == 2:
+                for row in fleet.per_shard_stats():
+                    emit(f"serve/fleet/shard{row['shard']}",
+                         1e6 / max(row["tok_s"], 1e-9),
+                         f"tok_s={row['tok_s']:.1f};"
+                         f"dispatches={row['dispatches']};"
+                         f"p95_us={row['p95_ms'] * 1e3:.0f};"
+                         f"deadline_miss={row['deadline_miss']};"
+                         f"error_completions={row['error_completions']}")
+                    assert row["tokens_out"] > 0, (
+                        f"fleet shard {row['shard']} served no tokens — "
+                        "least-loaded routing never reached it")
+        finally:
+            fleet.close()
+    scale_x = fl_tok_s[2] / max(fl_tok_s[1], 1e-9)
+    emit("serve/fleet/scaling", 1e6 / max(fl_tok_s[2], 1e-9),
+         f"tok_s={fl_tok_s[2]:.1f};tok_s_1={fl_tok_s[1]:.1f};"
+         f"tok_s_2={fl_tok_s[2]:.1f};scale_x={scale_x:.3f};cores={cores}")
+    if cores >= 2:
+        assert scale_x > 1.0, (
+            f"fleet: 2 mp shards on {cores} cores did not beat 1 shard "
+            f"(scale_x={scale_x:.3f})")
+    else:
+        assert scale_x >= 0.75, (
+            f"fleet: facade+IPC overhead too high on 1 core "
+            f"(scale_x={scale_x:.3f})")
+
+    # Fleet chaos soak: a shard kill fired mid-drain on a 2-shard in-process
+    # fleet over the paged cache. Gates: exactly one completion per request
+    # fleet-wide, at least one failover actually happened, no request had to
+    # be abandoned (shard_lost == 0 — the snapshot covered everything), and
+    # every completion is byte-identical to a 1-engine chaos-free drain
+    # (checkpoints are taken every fleet step, so failover replay loses no
+    # committed chunk).
+    os.environ["REPRO_KV_PAGES"] = "8"
+    try:
+        cfl = serve_fleet("pimref-100m", shards=2, backend="inproc",
+                          requests=8,
+                          fleet_chaos=ShardChaosConfig.parse("kill=1@2"),
+                          **fl_kw)
+        fref = serve_queue("pimref-100m", slots=2, requests=8,
+                           prompt_len=PROMPT, gen=16, chunk=4, seed=0)
+    finally:
+        os.environ.pop("REPRO_KV_PAGES", None)
+    try:
+        fs = cfl.stats
+        ref_toks = {c.uid: c.tokens for c in fref.completions}
+        cfl_toks = {c.uid: c.tokens for c in cfl.completions}
+        fl_match = (sorted(cfl_toks) == sorted(ref_toks) and all(
+            np.array_equal(cfl_toks[u], ref_toks[u]) for u in ref_toks))
+        emit("serve/fleet/chaos_soak",
+             1e6 / max(fs["tokens_per_second"], 1e-9),
+             f"tok_s={fs['tokens_per_second']:.1f};"
+             f"failovers={fs['failovers']};replays={fs['replays']};"
+             f"shard_lost={fs['shard_lost']};"
+             f"heartbeat_misses={fs['heartbeat_misses']};"
+             f"error_completions={fs['error_completions']};"
+             f"chaos_events={len(cfl.chaos_events)};"
+             f"survivor_match={fl_match}")
+        assert sorted(c.uid for c in cfl.completions) == list(range(8)), \
+            "fleet chaos_soak: requests lost or duplicated under shard kill"
+        assert fs["failovers"] >= 1, \
+            "fleet chaos_soak: the shard kill never triggered a failover"
+        assert fs["shard_lost"] == 0, \
+            "fleet chaos_soak: snapshot failover abandoned a request"
+        assert fl_match, ("fleet chaos_soak: completions diverge from the "
+                          "chaos-free single-engine drain")
+    finally:
+        cfl.close()
 
 
 if __name__ == "__main__":

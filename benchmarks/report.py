@@ -124,6 +124,9 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
         "accepted_len_per_draft": {}, "spec_speedup": {},
         "deadline_miss": {}, "shed_events": {}, "retries": {},
         "error_completions": {},
+        "fleet_scale_x": {}, "fleet_cores": {}, "fleet_tokens_s_1": {},
+        "fleet_tokens_s_2": {}, "failovers": {}, "replays": {},
+        "shard_lost": {}, "heartbeat_misses": {}, "dispatches": {},
     }
     with open(csv_path) as f:
         for line in f:
@@ -152,7 +155,16 @@ def parse_serve_csv(csv_path: str) -> Dict[str, Dict[str, float]]:
                          "deadline_miss": "deadline_miss",
                          "shed_events": "shed_events",
                          "retries": "retries",
-                         "error_completions": "error_completions"}.get(k)
+                         "error_completions": "error_completions",
+                         "scale_x": "fleet_scale_x",
+                         "cores": "fleet_cores",
+                         "tok_s_1": "fleet_tokens_s_1",
+                         "tok_s_2": "fleet_tokens_s_2",
+                         "failovers": "failovers",
+                         "replays": "replays",
+                         "shard_lost": "shard_lost",
+                         "heartbeat_misses": "heartbeat_misses",
+                         "dispatches": "dispatches"}.get(k)
                 if field is None:
                     continue
                 try:

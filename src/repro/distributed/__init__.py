@@ -1,10 +1,15 @@
 from repro.distributed.chaos import (ChaosConfig, ChaosError, ChaosMonkey,
-                                     TransientStepError)
-from repro.distributed.fault_tolerance import (PreemptionHandler,
-                                               RestartManifest,
+                                     ShardChaosConfig, ShardChaosMonkey,
+                                     ShardKilledError, TransientStepError)
+from repro.distributed.dispatcher import Dispatcher
+from repro.distributed.fault_tolerance import (HealthMonitor,
+                                               PreemptionHandler,
+                                               RestartManifest, ShardState,
                                                StragglerMonitor)
 from repro.distributed.pipeline import bubble_fraction, pipelined_forward
 
 __all__ = ["PreemptionHandler", "StragglerMonitor", "RestartManifest",
+           "HealthMonitor", "ShardState", "Dispatcher",
            "ChaosConfig", "ChaosError", "ChaosMonkey", "TransientStepError",
+           "ShardChaosConfig", "ShardChaosMonkey", "ShardKilledError",
            "pipelined_forward", "bubble_fraction"]

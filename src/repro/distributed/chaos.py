@@ -44,6 +44,14 @@ class TransientStepError(ChaosError):
     """Injected transient chunk-dispatch failure (succeeds on retry)."""
 
 
+class ShardKilledError(ChaosError):
+    """Injected hard shard loss: an in-process fleet shard raises this from
+    its next step (the multiprocessing backend gets a real SIGKILL via
+    ``Process.terminate`` instead — both surface as an unambiguous death to
+    the fleet's :class:`~repro.distributed.fault_tolerance.HealthMonitor`).
+    """
+
+
 def nan_logits_hook(logits, row_pos, arm):
     """Trace-time NaN injection for ``make_generate_step(logits_hook=...)``.
 
@@ -193,6 +201,8 @@ class ChaosMonkey:
                 f"(seed={self.cfg.seed})")
 
     # -- page-pool pressure -------------------------------------------------
+    # (shard-level faults live in ShardChaosConfig / ShardChaosMonkey below —
+    # this class injects *inside* one engine, those kill whole shards)
     def page_pressure(self, alloc, idx: int) -> None:
         """Steal ``cfg.pages`` physical pages from ``alloc``'s free list
         once, after ``steal_after_chunk`` chunks have dispatched."""
@@ -207,3 +217,131 @@ class ChaosMonkey:
     def release_pages(self, alloc) -> None:
         alloc.free.extend(self.held_pages)
         self.held_pages = []
+
+
+# ---------------------------------------------------------------------------
+# Shard-level faults (the fleet failure domain)
+# ---------------------------------------------------------------------------
+@dataclass
+class ShardChaosConfig:
+    """Seeded shard-level fault plan for a ``ServeFleet`` drain.
+
+    Three fault kinds, mirroring what UPMEM-scale deployments actually see
+    from independent ranks (arXiv:2105.03814):
+
+    * **kill** — hard shard loss: the in-process shard raises
+      :class:`ShardKilledError`; the multiprocessing shard is
+      ``terminate()``-d. Unambiguous death -> immediate failover.
+    * **stall** — the shard hangs: it stops stepping *and* heartbeating for
+      ``stall_steps`` fleet steps (default: forever), so the HealthMonitor
+      must walk the miss -> suspect -> dead escalation before failover.
+    * **drop** — heartbeats are dropped for ``drop_beats`` steps while the
+      shard keeps working: exercises suspect -> recover without failover.
+
+    ``kill_targets`` / ``stall_targets`` / ``drop_targets`` map
+    ``shard -> fleet step`` for deterministic tests; the ``kill`` /
+    ``stall`` / ``drop`` budgets instead draw distinct (shard, step) pairs
+    from the seed at :class:`ShardChaosMonkey` construction. Every fault
+    fires at most once per shard (fire-once), so a drain with the same seed
+    replays the same faults.
+
+    :meth:`parse` accepts the CLI/env spelling used by ``--fleet-chaos``:
+    explicit targets ``kill=SHARD@STEP`` (``drop=SHARD@STEPxBEATS`` adds a
+    beat count) and seeded budgets ``kills=N,stalls=N,drops=N``, e.g.
+    ``"kill=1@2"`` or ``"seed=7,kills=1,drops=1"``.
+    """
+
+    seed: int = 0
+    kill: int = 0
+    stall: int = 0
+    drop: int = 0
+    after_step: int = 1           # earliest step for seeded draws
+    window: int = 4               # seeded steps land in [after, after+window)
+    stall_steps: int = 1 << 30    # a stall is a hang unless bounded
+    drop_beats: int = 2
+    kill_targets: Optional[Dict[int, int]] = None
+    stall_targets: Optional[Dict[int, int]] = None
+    drop_targets: Optional[Dict[int, Tuple[int, int]]] = None  # sid->(step,n)
+
+    @classmethod
+    def parse(cls, spec: str, seed: int = 0) -> "ShardChaosConfig":
+        """Parse ``"kill=1@2,stall=0@4,drop=1@3x2,kills=1,seed=7"``."""
+        kw: Dict[str, Any] = {"seed": seed}
+        budgets = {"kills": "kill", "stalls": "stall", "drops": "drop"}
+        ints = ("seed", "after_step", "window", "stall_steps", "drop_beats")
+        for part in spec.split(","):
+            part = part.strip()
+            if not part:
+                continue
+            k, _, v = part.partition("=")
+            k = k.strip()
+            if k in budgets:
+                kw[budgets[k]] = int(v)
+            elif k in ints:
+                kw[k] = int(v)
+            elif k in ("kill", "stall"):
+                sid, _, step = v.partition("@")
+                tgt = kw.setdefault(k + "_targets", {})
+                tgt[int(sid)] = int(step or 1)
+            elif k == "drop":
+                sid, _, rest = v.partition("@")
+                step, _, beats = rest.partition("x")
+                tgt = kw.setdefault("drop_targets", {})
+                tgt[int(sid)] = (int(step or 1), int(beats or 2))
+            else:
+                raise ValueError(f"--fleet-chaos: unknown shard fault {k!r}")
+        return cls(**kw)
+
+    @property
+    def armed(self) -> bool:
+        return bool(self.kill or self.stall or self.drop or self.kill_targets
+                    or self.stall_targets or self.drop_targets)
+
+
+class ShardChaosMonkey:
+    """Executes a :class:`ShardChaosConfig` against one fleet drain.
+
+    The fleet calls :meth:`directive` for every (shard, fleet step) before
+    dispatching that shard's step; the returned directive (or None) tells
+    the shard handle what to inject. Seeded budget draws are fixed at
+    construction (distinct shards, steps in the config window) so the plan
+    is a pure function of (seed, n_shards) — deterministic and fire-once,
+    exactly like the engine-level :class:`ChaosMonkey`.
+    """
+
+    def __init__(self, cfg: ShardChaosConfig, n_shards: int):
+        self.cfg = cfg
+        self.events: List[Dict[str, Any]] = []
+        rng = np.random.default_rng(cfg.seed)
+        self._plan: Dict[Tuple[int, int], Dict[str, Any]] = {}
+
+        def seed_draws(kind: str, budget: int, extra=None) -> None:
+            picks = rng.choice(n_shards, size=min(budget, n_shards),
+                               replace=False) if budget else []
+            for sid in picks:
+                step = int(cfg.after_step + rng.integers(0, max(cfg.window,
+                                                                1)))
+                self._add(kind, int(sid), step, extra)
+
+        for sid, step in (cfg.kill_targets or {}).items():
+            self._add("kill", sid, step, None)
+        for sid, step in (cfg.stall_targets or {}).items():
+            self._add("stall", sid, step, {"steps": cfg.stall_steps})
+        for sid, (step, beats) in (cfg.drop_targets or {}).items():
+            self._add("drop", sid, step, {"beats": beats})
+        seed_draws("kill", cfg.kill)
+        seed_draws("stall", cfg.stall, {"steps": cfg.stall_steps})
+        seed_draws("drop", cfg.drop, {"beats": cfg.drop_beats})
+
+    def _add(self, kind: str, sid: int, step: int, extra) -> None:
+        d = {"kind": kind, "shard": sid, "step": step}
+        if extra:
+            d.update(extra)
+        self._plan.setdefault((sid, step), d)
+
+    def directive(self, shard: int, step: int) -> Optional[Dict[str, Any]]:
+        """Fault to inject into ``shard`` at fleet ``step`` (fire-once)."""
+        d = self._plan.pop((shard, step), None)
+        if d is not None:
+            self.events.append(dict(d))
+        return d

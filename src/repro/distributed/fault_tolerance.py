@@ -10,14 +10,25 @@ grace window), (ii) hard node loss (step never completes), (iii) stragglers
   ``threshold x`` EMA are flagged. On a real fleet the flag feeds the
   controller that cordons the slow host and triggers an elastic restart
   without it; here it logs and records into the manifest.
+* :class:`HealthMonitor` — the StragglerMonitor idea promoted to fleet
+  scope: instead of timing one process's steps, it keeps a per-shard
+  heartbeat ledger for a :class:`~repro.launch.fleet.ServeFleet`. A shard
+  that answers a dispatch beats; one that misses ``miss_suspect``
+  consecutive beats is SUSPECT (the dispatcher stops routing new work to
+  it), ``miss_dead`` misses is DEAD (the fleet fails its work over to a
+  survivor). A beat from a SUSPECT shard revives it — UPMEM-style fleets
+  see transient rank stalls far more often than hard losses.
 * :class:`RestartManifest` — tiny JSON (step, mesh shape, data cursor,
   checkpoint path). Because checkpoints are layout-agnostic (global arrays)
   and the data pipeline is ``batch(step)``-deterministic, a restart may use
   a *different* device count: the launcher re-plans shardings for the
-  surviving mesh and resumes the exact token stream.
+  surviving mesh and resumes the exact token stream. ``save`` is atomic
+  (tmp file + ``os.replace``): a SIGTERM or shard kill mid-save can never
+  leave a torn manifest behind for the next restart to trip on.
 """
 from __future__ import annotations
 
+import enum
 import json
 import os
 import signal
@@ -75,6 +86,101 @@ class StragglerMonitor:
         return flag
 
 
+class ShardState(str, enum.Enum):
+    """Failure-domain state of one fleet shard (see :class:`HealthMonitor`).
+
+    LIVE shards take new work; SUSPECT shards keep their in-flight work but
+    receive no new routing until they beat again; DEAD is sticky — the
+    fleet has already failed the shard's work over, so a late reply from a
+    zombie shard must never resurrect it.
+    """
+
+    LIVE = "live"
+    SUSPECT = "suspect"
+    DEAD = "dead"
+
+    def __str__(self) -> str:
+        return self.value
+
+
+class HealthMonitor:
+    """Per-shard heartbeat ledger: miss-threshold -> suspect -> dead.
+
+    The fleet calls :meth:`beat` when a shard answers a step dispatch (with
+    its heartbeat flag set) and :meth:`miss` when it does not (timeout,
+    stall, or a reply whose heartbeat was dropped). ``miss_suspect``
+    consecutive misses quarantine routing; ``miss_dead`` misses declare the
+    shard lost. :meth:`mark_dead` skips the escalation for unambiguous
+    failures (process exit, closed pipe, raised kill). All transitions are
+    appended to ``events`` for tests and the bench soak cell.
+    """
+
+    def __init__(self, n_shards: int, *, miss_suspect: int = 2,
+                 miss_dead: int = 4):
+        assert 0 < miss_suspect <= miss_dead
+        self.miss_suspect, self.miss_dead = miss_suspect, miss_dead
+        self.states = [ShardState.LIVE] * n_shards
+        self.misses = [0] * n_shards
+        self.beats = [0] * n_shards
+        self.suspects = 0
+        self.recoveries = 0
+        self.deaths = 0
+        self.events: List[Dict[str, Any]] = []
+
+    def state(self, shard: int) -> ShardState:
+        return self.states[shard]
+
+    def alive(self, shard: int) -> bool:
+        return self.states[shard] is not ShardState.DEAD
+
+    @property
+    def live_shards(self) -> List[int]:
+        return [s for s, st in enumerate(self.states)
+                if st is ShardState.LIVE]
+
+    @property
+    def dead_shards(self) -> List[int]:
+        return [s for s, st in enumerate(self.states)
+                if st is ShardState.DEAD]
+
+    def beat(self, shard: int, step: int) -> ShardState:
+        """A heartbeat arrived; a SUSPECT shard recovers to LIVE."""
+        if self.states[shard] is ShardState.DEAD:
+            return ShardState.DEAD                 # zombies stay dead
+        self.beats[shard] += 1
+        self.misses[shard] = 0
+        if self.states[shard] is ShardState.SUSPECT:
+            self.states[shard] = ShardState.LIVE
+            self.recoveries += 1
+            self.events.append({"kind": "recover", "shard": shard,
+                                "step": step})
+        return self.states[shard]
+
+    def miss(self, shard: int, step: int) -> ShardState:
+        """A heartbeat was missed; escalate suspect -> dead at thresholds."""
+        if self.states[shard] is ShardState.DEAD:
+            return ShardState.DEAD
+        self.misses[shard] += 1
+        if self.misses[shard] >= self.miss_dead:
+            return self.mark_dead(shard, step,
+                                  f"{self.misses[shard]} missed heartbeats")
+        if (self.misses[shard] >= self.miss_suspect
+                and self.states[shard] is ShardState.LIVE):
+            self.states[shard] = ShardState.SUSPECT
+            self.suspects += 1
+            self.events.append({"kind": "suspect", "shard": shard,
+                                "step": step, "misses": self.misses[shard]})
+        return self.states[shard]
+
+    def mark_dead(self, shard: int, step: int, reason: str) -> ShardState:
+        if self.states[shard] is not ShardState.DEAD:
+            self.states[shard] = ShardState.DEAD
+            self.deaths += 1
+            self.events.append({"kind": "dead", "shard": shard,
+                                "step": step, "reason": reason})
+        return ShardState.DEAD
+
+
 @dataclass
 class RestartManifest:
     step: int
@@ -92,10 +198,21 @@ class RestartManifest:
     serve: Optional[Dict[str, Any]] = None
 
     def save(self, path: str) -> None:
+        """Atomically persist: write ``path + ".tmp"``, fsync, then
+        ``os.replace``. A crash mid-save leaves either the previous manifest
+        or none — never a torn file — and the orphaned tmp is removed on the
+        failure path so a retry starts clean."""
         tmp = path + ".tmp"
-        with open(tmp, "w") as f:
-            json.dump(asdict(self), f)
-        os.rename(tmp, path)
+        try:
+            with open(tmp, "w") as f:
+                json.dump(asdict(self), f)
+                f.flush()
+                os.fsync(f.fileno())
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
 
     @classmethod
     def load(cls, path: str) -> "RestartManifest":

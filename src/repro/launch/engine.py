@@ -75,6 +75,7 @@ class ErrorReason(str, enum.Enum):
     PAGE_POOL = "page_pool"               # KV page pool cannot hold request
     NAN_LOGITS = "nan_logits"             # finite guard quarantined the slot
     STEP_FAILURE = "step_failure"         # chunk dispatch failed (post-retry)
+    SHARD_LOST = "shard_lost"             # fleet shard died, replay impossible
 
     def __str__(self) -> str:             # log/CSV-friendly
         return self.value
@@ -670,6 +671,8 @@ class ServeEngine:
         self.stats["kv_hbm_bytes_peak"] = max(
             self.stats["kv_hbm_bytes_peak"], self.stats["kv_hbm_bytes"])
         self.stats["prefix_hits"] = self._alloc.hits
+        # routing signal for the fleet dispatcher's least-loaded tiebreak
+        self.stats["kv_pages_reserved"] = self._reserved_total
 
     def _admit(self) -> None:
         while self._free and self._queue:

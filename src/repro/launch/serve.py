@@ -26,11 +26,12 @@ import numpy as np
 
 from repro.configs import ALL_IDS, ShapeConfig, get_config
 from repro.core.mimdram import plan_sharding, use_plan
-from repro.distributed.chaos import ChaosConfig
+from repro.distributed.chaos import ChaosConfig, ShardChaosConfig
 from repro.distributed.fault_tolerance import (PreemptionHandler,
                                                RestartManifest)
 from repro.launch import mesh as mesh_lib
 from repro.launch.engine import Request, ServeEngine
+from repro.launch.fleet import ServeFleet
 from repro.launch.steps import (make_decode_step, make_serving_jits,
                                 sample_tokens, spec_config)
 from repro.models import build_model, init_params
@@ -279,6 +280,87 @@ def serve_queue(arch: str, *, smoke: bool = True, slots: int = 4,
     return eng
 
 
+def make_fleet(arch: str, *, shards: int = 2, backend: str = "inproc",
+               smoke: bool = True, slots: int = 4, prompt_len: int = 32,
+               gen: int = 16, chunk: int = 8, seed: int = 0,
+               temperature: float = 0.0, top_k: int = 0,
+               spec: Optional[str] = None, spec_k: Optional[int] = None,
+               fleet_chaos: Optional[ShardChaosConfig] = None,
+               checkpoint_every: int = 1, manifest_dir: Optional[str] = None,
+               miss_suspect: int = 2, miss_dead: int = 4,
+               heartbeat_timeout_s: float = 120.0, max_replays: int = 2,
+               **engine_kwargs: Any) -> ServeFleet:
+    """Build a :class:`ServeFleet` of identical engine shards.
+
+    Every shard gets the same arch/seed/knobs, so any shard decodes any
+    request byte-identically — the property failover replay rests on. The
+    ``mp`` backend additionally records the serving env knobs so spawned
+    workers trace the same cache layout / kernels / drafter."""
+    ekw = dict(arch=arch, smoke=smoke, slots=slots, prompt_len=prompt_len,
+               gen=gen, chunk=chunk, seed=seed, temperature=temperature,
+               top_k=top_k, spec=spec, spec_k=spec_k, **engine_kwargs)
+    factory = worker_spec = None
+    if backend == "mp":
+        worker_spec = {"engine": ekw,
+                       "env": {k: os.environ[k] for k in _SERVE_ENV_KNOBS
+                               if k in os.environ}}
+    else:
+        factory = lambda sid: make_queue_engine(**ekw)  # noqa: E731
+    return ServeFleet(factory, shards=shards, backend=backend,
+                      worker_spec=worker_spec, chaos=fleet_chaos,
+                      checkpoint_every=checkpoint_every,
+                      manifest_dir=manifest_dir, miss_suspect=miss_suspect,
+                      miss_dead=miss_dead,
+                      heartbeat_timeout_s=heartbeat_timeout_s,
+                      max_replays=max_replays, seed=seed)
+
+
+def serve_fleet(arch: str, *, smoke: bool = True, shards: int = 2,
+                backend: str = "inproc", slots: int = 4, requests: int = 10,
+                prompt_len: int = 32, gen: int = 16, chunk: int = 8,
+                seed: int = 0, temperature: float = 0.0, top_k: int = 0,
+                shared_prefix: int = 0, repeat_period: int = 0,
+                spec: Optional[str] = None, spec_k: Optional[int] = None,
+                **fleet_kwargs: Any) -> ServeFleet:
+    """Drain the queue-mode synthetic request stream through a sharded
+    fleet; returns the drained fleet (caller closes it). The request stream
+    is identical to :func:`serve_queue`'s, so a 1-shard reference engine
+    drains the exact same queue for byte-identity verification."""
+    fleet = make_fleet(arch, shards=shards, backend=backend, smoke=smoke,
+                       slots=slots, prompt_len=prompt_len, gen=gen,
+                       chunk=chunk, seed=seed, temperature=temperature,
+                       top_k=top_k, spec=spec, spec_k=spec_k, **fleet_kwargs)
+    reqs = synth_requests(arch, smoke=smoke, requests=requests,
+                          prompt_len=prompt_len, gen=gen, seed=seed,
+                          shared_prefix=shared_prefix,
+                          repeat_period=repeat_period)
+    fleet.run(reqs)
+    return fleet
+
+
+def _print_fleet_stats(fleet: ServeFleet) -> None:
+    s = fleet.stats
+    print(f"fleet: {fleet.n_shards} shards ({fleet.backend}), "
+          f"{len(fleet.completions)} requests, {s['tokens_out']} tokens in "
+          f"{s['wall_seconds']:.2f}s ({s['tokens_per_second']:.1f} tok/s), "
+          f"{s['fleet_steps']} fleet steps, {s['checkpoints']} checkpoints")
+    if (s["failovers"] or s["heartbeat_misses"] or s["error_completions"]
+            or fleet.chaos_events):
+        print(f"fleet robust: {s['failovers']} failovers "
+              f"({s['replays']} replays, {s['shard_lost']} shard_lost), "
+              f"{s['heartbeat_misses']} heartbeat misses "
+              f"({s.get('suspects', 0)} suspects, "
+              f"{s.get('recoveries', 0)} recoveries, "
+              f"{s.get('deaths', 0)} deaths), "
+              f"{s['error_completions']} error completions, "
+              f"{len(fleet.chaos_events)} chaos events")
+    for row in fleet.per_shard_stats():
+        print(f"  shard {row['shard']} [{row['state']}]: "
+              f"{row['tokens_out']} tokens, {row['dispatches']} dispatches, "
+              f"{row['tok_s']:.1f} tok/s, p50 {row['p50_ms']:.1f}ms, "
+              f"p95 {row['p95_ms']:.1f}ms")
+
+
 def save_serve_manifest(path: str, eng: ServeEngine, *, arch: str,
                         smoke: bool, slots: int, prompt_len: int, gen: int,
                         chunk: int,
@@ -458,6 +540,37 @@ def main() -> None:
     ap.add_argument("--restore-verify", action="store_true",
                     help="with --restore: also run the original queue "
                     "uninterrupted and assert byte-identical completions")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="queue mode: drain through a ServeFleet of this "
+                    "many engine shards behind one dispatcher (1 = single "
+                    "engine, no fleet)")
+    ap.add_argument("--fleet-backend", default="inproc",
+                    choices=["inproc", "mp"],
+                    help="shard placement: in-process objects or "
+                    "multiprocessing workers (the CPU multi-host stand-in)")
+    ap.add_argument("--fleet-chaos", default=None,
+                    help="shard-level fault plan, e.g. 'kill=1@2' (kill "
+                    "shard 1 at fleet step 2), 'stall=0@3', 'drop=1@2x2', "
+                    "or seeded budgets 'kills=1,seed=7' (implies --shards)")
+    ap.add_argument("--fleet-verify", action="store_true",
+                    help="re-drain the identical queue through one engine "
+                    "and assert exactly one completion per request with "
+                    "byte-identical survivor outputs")
+    ap.add_argument("--heartbeat-timeout", type=float, default=120.0,
+                    help="seconds a shard may owe its step reply before the "
+                    "fleet counts a missed heartbeat")
+    ap.add_argument("--miss-suspect", type=int, default=2,
+                    help="consecutive missed heartbeats before a shard is "
+                    "SUSPECT (no new routing)")
+    ap.add_argument("--miss-dead", type=int, default=4,
+                    help="consecutive missed heartbeats before a shard is "
+                    "DEAD (failover)")
+    ap.add_argument("--checkpoint-every", type=int, default=1,
+                    help="fleet steps between periodic shard snapshots "
+                    "(the failover replay source)")
+    ap.add_argument("--manifest-dir", default=None,
+                    help="persist each shard snapshot as an atomic "
+                    "RestartManifest under this directory")
     ap.add_argument("--full", dest="smoke", action="store_false", default=True)
     args = ap.parse_args()
     if args.attn_impl:
@@ -509,6 +622,33 @@ def main() -> None:
             temperature=args.temperature, top_k=args.top_k,
             shared_prefix=args.shared_prefix,
             repeat_period=args.repeat_period)
+        if args.shards > 1 or args.fleet_chaos or \
+                args.fleet_backend == "mp":
+            fc = (ShardChaosConfig.parse(args.fleet_chaos,
+                                         seed=args.chaos_seed or 0)
+                  if args.fleet_chaos else None)
+            fleet = serve_fleet(
+                args.arch, shards=max(args.shards, 1),
+                backend=args.fleet_backend, fleet_chaos=fc,
+                checkpoint_every=args.checkpoint_every,
+                manifest_dir=args.manifest_dir,
+                miss_suspect=args.miss_suspect, miss_dead=args.miss_dead,
+                heartbeat_timeout_s=args.heartbeat_timeout, **queue_kw)
+            _print_fleet_stats(fleet)
+            try:
+                if args.fleet_verify:
+                    uids = sorted(c.uid for c in fleet.completions)
+                    assert uids == list(range(args.requests)), (
+                        f"fleet-verify: expected exactly one completion per "
+                        f"request, got uids {uids}")
+                    ref = serve_queue(args.arch, **queue_kw)
+                    n = _assert_identical(fleet, ref, "fleet-verify")
+                    print(f"fleet-verify: {n}/{args.requests} surviving "
+                          f"completions byte-identical with a single-engine "
+                          f"drain ({fleet.stats['failovers']} failovers)")
+            finally:
+                fleet.close()
+            return
         eng = serve_queue(args.arch, max_queue=args.max_queue,
                           deadline_ms=args.deadline_ms, chaos=chaos,
                           page_pool_pages=args.page_pool_pages, stop=stop,

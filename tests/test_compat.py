@@ -260,6 +260,25 @@ def test_pallas_lint_catches_direct_prefetch_grid_spec(tmp_path):
     assert not checker.find_pallas_offenders(str(tmp_path))
 
 
+def test_fleet_control_plane_stays_jax_free(tmp_path):
+    """The fleet dispatcher and ServeFleet facade are pure host bookkeeping:
+    no direct jax import is allowed there (version-sensitive symbols could
+    only leak in through one), and the repo's own modules must pass."""
+    checker = _load_checker()
+    assert not checker.find_fleet_offenders(REPO), \
+        checker.find_fleet_offenders(REPO)
+    # self-test: a jax import in a control-plane module is flagged
+    mod = tmp_path / "src" / "repro" / "distributed"
+    mod.mkdir(parents=True)
+    (mod / "dispatcher.py").write_text(
+        "import jax\nfrom repro.distributed import fault_tolerance\n")
+    offenders = checker.find_fleet_offenders(str(tmp_path))
+    assert len(offenders) == 1 and "dispatcher.py:1" in offenders[0]
+    (mod / "dispatcher.py").write_text(
+        "from repro.distributed.fault_tolerance import HealthMonitor\n")
+    assert not checker.find_fleet_offenders(str(tmp_path))
+
+
 def test_pallas_prefetch_grid_spec_resolves():
     # may legitimately be None only where the TPU namespace is absent
     spec = compat.pallas_prefetch_grid_spec()

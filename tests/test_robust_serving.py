@@ -82,7 +82,7 @@ def test_page_allocator_typed_exhaustion():
 def test_error_reason_enum_is_the_shared_vocabulary():
     assert {r.value for r in ErrorReason} == {
         "prompt_too_long", "bad_request", "queue_full", "deadline",
-        "page_pool", "nan_logits", "step_failure"}
+        "page_pool", "nan_logits", "step_failure", "shard_lost"}
     assert str(ErrorReason.NAN_LOGITS) == "nan_logits"
 
 

@@ -109,16 +109,47 @@ def find_pallas_offenders(repo: str) -> List[str]:
     return offenders
 
 
+# The fleet control plane (dispatcher + ServeFleet) must stay free of direct
+# jax imports: routing/health/failover logic is pure host bookkeeping, and
+# keeping jax out guarantees no version-sensitive symbol can leak in outside
+# repro.compat (and that spawned mp workers pay the jax import only inside
+# the worker engine, never for the facade). Engine/device work is reached
+# through repro.launch.engine / repro.launch.serve instead.
+_CONTROL_PLANE = (
+    os.path.join("src", "repro", "distributed", "dispatcher.py"),
+    os.path.join("src", "repro", "launch", "fleet.py"),
+)
+_JAX_IMPORT = re.compile(r"^\s*(import\s+jax\b|from\s+jax\b)")
+
+
+def find_fleet_offenders(repo: str) -> List[str]:
+    """Direct jax imports inside the fleet control-plane modules."""
+    offenders = []
+    for rel in _CONTROL_PLANE:
+        path = os.path.join(repo, rel)
+        if not os.path.isfile(path):
+            continue
+        with open(path, encoding="utf-8") as fh:
+            for lineno, line in enumerate(fh, 1):
+                if _JAX_IMPORT.search(line):
+                    offenders.append(
+                        f"{rel}:{lineno}: {line.strip()} "
+                        "(fleet control plane must not import jax directly)")
+    return offenders
+
+
 def main() -> int:
     repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
-    offenders = find_offenders(repo) + find_pallas_offenders(repo)
+    offenders = (find_offenders(repo) + find_pallas_offenders(repo)
+                 + find_fleet_offenders(repo))
     if offenders:
         print("version-fragile JAX spellings outside repro.compat "
               "(import them from repro.compat instead):", file=sys.stderr)
         for line in offenders:
             print(f"  {line}", file=sys.stderr)
         return 1
-    print(f"compat lint clean ({len(FORBIDDEN)} patterns + pallas-site rule)")
+    print(f"compat lint clean ({len(FORBIDDEN)} patterns + pallas-site rule "
+          "+ fleet control-plane rule)")
     return 0
 
 
