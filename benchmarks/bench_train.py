@@ -1,0 +1,78 @@
+"""Training robustness soak (mirrors bench_serve's chaos cells).
+
+Two cells:
+
+* ``train/robust/clean`` — guarded-loop throughput baseline (steps/s with
+  the non-finite guard armed and checkpointing on);
+* ``train/robust/chaos_soak`` — a supervised run under the full train fault
+  plan (NaN grads, slow step, loss spike -> rollback, checkpoint write
+  failure, torn checkpoint, preemption -> auto-restart) verified
+  byte-identical to an uninterrupted reference run. The asserts are gates:
+  a soak that fails to skip/rollback/restart, or that breaks resume
+  identity, fails the bench.
+"""
+import shutil
+import tempfile
+import time
+
+import numpy as np
+
+from repro.configs import RunConfig
+from repro.distributed import TrainChaosConfig
+from repro.launch.train import train, verify_resume_identity
+
+ARCH = "pimref-100m"
+B, S = 4, 32
+
+
+def run(emit):
+    work = tempfile.mkdtemp(prefix="bench_train_")
+    try:
+        # -- clean guarded throughput ---------------------------------------
+        run_cfg = RunConfig(total_steps=10, learning_rate=1e-3,
+                            microbatches=1, checkpoint_every=5)
+        t0 = time.time()
+        clean = train(ARCH, steps=10, batch=B, seq=S, run=run_cfg,
+                      checkpoint_dir=f"{work}/clean", log_every=100)
+        wall = time.time() - t0
+        assert np.isfinite(clean["final_loss"])
+        assert clean["skipped_steps"] == 0
+        emit("train/robust/clean", wall * 1e6 / 10,
+             f"steps_s={10 / wall:.2f};final_loss={clean['final_loss']:.4f};"
+             f"skipped={clean['skipped_steps']}")
+
+        # -- chaos soak + resume-identity gate ------------------------------
+        steps = 14
+        soak_cfg = RunConfig(total_steps=steps, learning_rate=1e-3,
+                             microbatches=1, checkpoint_every=4)
+        chaos = TrainChaosConfig(
+            seed=11, nan_steps=[3, 9], slow_steps=[2], slow_ms=5.0,
+            spike_steps=[6], spike_x=50.0,       # -> rollback to step 4
+            ckpt_fail_steps=[14],                # final save dies mid-write
+            torn_steps=[12],                     # preemption ckpt is torn ->
+            preempt=11)                          # resume falls back to 8
+        t0 = time.time()
+        res = verify_resume_identity(
+            ARCH, steps=steps, work_dir=f"{work}/soak", chaos=chaos,
+            max_restarts=2, batch=B, seq=S, run=soak_cfg,
+            spike_warmup=4, log_every=100)
+        wall = time.time() - t0
+        out = res["out"]
+        kinds = {e["kind"] for e in out["chaos_events"]}
+        assert res["identical"], (
+            f"resume identity broken: losses={res['losses_match']} "
+            f"params={res['params_match']}")
+        assert out["skipped_steps"] >= 2       # both NaN steps skipped
+        assert out["rollbacks"] >= 1           # spike rolled back
+        assert res["restarts"] >= 1            # preemption restarted
+        assert out["ckpt_failures"] >= 1       # injected write failure seen
+        assert {"nan", "spike", "preempt", "torn", "ckpt_fail"} <= kinds
+        emit("train/robust/chaos_soak", wall * 1e6 / steps,
+             f"steps={steps};final_loss={out['final_loss']:.4f};"
+             f"skipped={out['skipped_steps']};rollbacks={out['rollbacks']};"
+             f"anomalies={out['anomalies']};restarts={res['restarts']};"
+             f"ckpt_failures={out['ckpt_failures']};"
+             f"chaos_events={len(out['chaos_events'])};"
+             f"resume_identity={res['identical']}")
+    finally:
+        shutil.rmtree(work, ignore_errors=True)

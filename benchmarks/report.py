@@ -207,6 +207,46 @@ def parse_kernels_csv(csv_path: str) -> Dict[str, Dict[str, object]]:
     return out
 
 
+def parse_train_csv(csv_path: str) -> Dict[str, Dict[str, object]]:
+    """Parse ``train/robust/...`` rows into one dict per cell.
+
+    Rows look like ``train/robust/chaos_soak,123.4,skipped=2;rollbacks=1;
+    resume_identity=True;...`` — numeric values are floated, the
+    ``resume_identity`` gate becomes a bool.
+    """
+    out: Dict[str, Dict[str, object]] = {}
+    with open(csv_path) as f:
+        for line in f:
+            if not line.startswith("train/"):
+                continue
+            name, us, derived = line.strip().split(",", 2)
+            cell = name[len("train/"):]
+            if cell.startswith("_"):      # harness bookkeeping
+                continue
+            row: Dict[str, object] = {"us_per_step": float(us)}
+            for kv in derived.split(";"):
+                if "=" not in kv:
+                    continue
+                k, v = kv.split("=", 1)
+                if v in ("True", "False"):
+                    row[k] = v == "True"
+                    continue
+                try:
+                    row[k] = float(v)
+                except ValueError:
+                    row[k] = v
+            out[cell] = row
+    return out
+
+
+def write_bench_train(csv_path: str, json_path: str) -> None:
+    data = parse_train_csv(csv_path)
+    with open(json_path, "w") as f:
+        json.dump(data, f, indent=2, sort_keys=True)
+        f.write("\n")
+    print(f"wrote {json_path}: {len(data)} train cells")
+
+
 def write_bench_kernels(csv_path: str, json_path: str) -> None:
     data = parse_kernels_csv(csv_path)
     with open(json_path, "w") as f:
@@ -235,12 +275,17 @@ def main() -> None:
     ap.add_argument("--kernels-csv", default=None,
                     help="run.py CSV to distill into BENCH_kernels.json")
     ap.add_argument("--kernels-json", default="BENCH_kernels.json")
+    ap.add_argument("--train-csv", default=None,
+                    help="run.py CSV to distill into BENCH_train.json")
+    ap.add_argument("--train-json", default="BENCH_train.json")
     args = ap.parse_args()
-    if args.serve_csv or args.kernels_csv:
+    if args.serve_csv or args.kernels_csv or args.train_csv:
         if args.serve_csv:
             write_bench_serve(args.serve_csv, args.bench_json)
         if args.kernels_csv:
             write_bench_kernels(args.kernels_csv, args.kernels_json)
+        if args.train_csv:
+            write_bench_train(args.train_csv, args.train_json)
         return
     rows = load(args.results, args.tag)
     single = [r for r in rows if not r.get("multi_pod")]

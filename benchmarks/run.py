@@ -12,7 +12,7 @@ import traceback
 
 from benchmarks import (bench_damov_classify, bench_dappa_productivity,
                         bench_kernels, bench_mimdram_utilization,
-                        bench_proteus_precision, bench_serve)
+                        bench_proteus_precision, bench_serve, bench_train)
 
 BENCHES = {
     "damov_classify": bench_damov_classify,
@@ -21,6 +21,7 @@ BENCHES = {
     "dappa_productivity": bench_dappa_productivity,
     "kernels": bench_kernels,
     "serve": bench_serve,
+    "train": bench_train,
 }
 
 

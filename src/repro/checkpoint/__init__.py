@@ -1,3 +1,8 @@
-from repro.checkpoint.manager import CheckpointManager, load_checkpoint
+from repro.checkpoint.manager import (CheckpointCorruptError, CheckpointError,
+                                      CheckpointManager,
+                                      CheckpointMismatchError,
+                                      CheckpointWriteError, load_checkpoint)
 
-__all__ = ["CheckpointManager", "load_checkpoint"]
+__all__ = ["CheckpointManager", "load_checkpoint", "CheckpointError",
+           "CheckpointWriteError", "CheckpointCorruptError",
+           "CheckpointMismatchError"]

@@ -1,11 +1,20 @@
-"""Checkpointing: atomic step snapshots, async save, elastic reshard-on-load.
+"""Checkpointing: atomic, verified step snapshots, async save, elastic load.
 
 Layout:  <dir>/step_00000100/  leaf files `<flat-key>.npy` + manifest.json.
-Writes go to a tmp dir renamed into place (atomic on POSIX), so a crash
-mid-save never corrupts the latest checkpoint. Checkpoints store *global*
-(unsharded) arrays; on restore, leaves are ``jax.device_put`` with whatever
-sharding the (possibly different-sized) new mesh plan dictates — that is the
-elastic-rescale path: save on 512 chips, resume on 256, or on CPU.
+Writes go to a tmp dir renamed into place (atomic on POSIX) with every leaf
+file, the manifest, and the directory fsync'd first — matching
+``RestartManifest.save`` — so a crash mid-save never corrupts the latest
+checkpoint. The manifest records a per-leaf CRC32; ``restore`` verifies
+shape, dtype, and checksum and *falls back to the previous checkpoint* (with
+a warning) when the latest is torn or corrupt, so a bad write costs one
+checkpoint interval, never the run. Async-writer exceptions are captured and
+re-raised at the next ``save()``/``wait()`` instead of dying silently in the
+thread.
+
+Checkpoints store *global* (unsharded) arrays; on restore, leaves are
+``jax.device_put`` with whatever sharding the (possibly different-sized) new
+mesh plan dictates — that is the elastic-rescale path: save on 512 chips,
+resume on 256, or on CPU.
 """
 from __future__ import annotations
 
@@ -14,10 +23,32 @@ import os
 import re
 import shutil
 import threading
-from typing import Any, Dict, List, Optional, Tuple
+import warnings
+import zlib
+from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import jax
 import numpy as np
+
+
+class CheckpointError(RuntimeError):
+    """Base class for typed checkpoint failures."""
+
+
+class CheckpointWriteError(CheckpointError):
+    """A checkpoint write failed (sync, or captured from the async writer
+    and re-raised at the next ``save()``/``wait()``)."""
+
+
+class CheckpointCorruptError(CheckpointError):
+    """A checkpoint on disk is torn or corrupt: unreadable manifest/leaf,
+    or a leaf whose CRC32/shape/dtype disagrees with its manifest entry."""
+
+
+class CheckpointMismatchError(CheckpointError, ValueError):
+    """The checkpoint is intact but does not match the restore *template*
+    (missing leaf, or shape/dtype mismatch). Subclasses ``ValueError`` so
+    pre-existing shape-mismatch handling keeps working."""
 
 
 def _flatten(tree: Any) -> Dict[str, Any]:
@@ -32,12 +63,48 @@ def _key_sanitize(key: str) -> str:
     return re.sub(r"[^A-Za-z0-9_.\-]", "_", key)
 
 
+def _crc(arr: np.ndarray) -> int:
+    # tobytes() copies to C order itself; ascontiguousarray would promote
+    # 0-d leaves (optimizer step counters) to shape (1,) on some numpys.
+    return zlib.crc32(arr.tobytes())
+
+
+def _fsync_dir(path: str) -> None:
+    try:
+        fd = os.open(path, os.O_RDONLY)
+    except OSError:
+        return  # platform without directory fds — rename is still atomic
+    try:
+        os.fsync(fd)
+    finally:
+        os.close(fd)
+
+
+def _rmtree_atomic(path: str, suffix: str) -> None:
+    """Delete a checkpoint dir without ever exposing a half-deleted step:
+    rename out of the ``step_NNN`` namespace first, then rmtree. A crash
+    between the two leaves only a ``.trash``/``.old`` dir that ``all_steps``
+    ignores and the next write sweeps."""
+    side = path + suffix
+    shutil.rmtree(side, ignore_errors=True)
+    try:
+        os.rename(path, side)
+    except OSError:
+        return
+    shutil.rmtree(side, ignore_errors=True)
+
+
 class CheckpointManager:
-    def __init__(self, directory: str, keep: int = 3, async_save: bool = True):
+    def __init__(self, directory: str, keep: int = 3, async_save: bool = True,
+                 fault_hook: Optional[Callable[[int, str], None]] = None):
         self.dir = directory
         self.keep = keep
         self.async_save = async_save
+        # chaos injection point: called as fault_hook(step, leaf_key) before
+        # each leaf write; raising simulates a mid-save I/O failure.
+        self.fault_hook = fault_hook
         self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
         os.makedirs(directory, exist_ok=True)
 
     # -- save -----------------------------------------------------------------
@@ -46,13 +113,23 @@ class CheckpointManager:
         # materialize on host before handing to the writer thread
         host_tree = jax.tree_util.tree_map(
             lambda x: np.asarray(jax.device_get(x)), tree)
-        self.wait()
+        self.wait()  # re-raises a captured async-write failure
         if self.async_save and not block:
             self._thread = threading.Thread(
-                target=self._write, args=(step, host_tree, extra or {}))
+                target=self._write_guarded, args=(step, host_tree, extra or {}))
             self._thread.start()
         else:
-            self._write(step, host_tree, extra or {})
+            try:
+                self._write(step, host_tree, extra or {})
+            except Exception as e:
+                raise CheckpointWriteError(
+                    f"checkpoint write for step {step} failed: {e}") from e
+
+    def _write_guarded(self, step: int, host_tree: Any, extra: Dict) -> None:
+        try:
+            self._write(step, host_tree, extra)
+        except BaseException as e:  # noqa: BLE001 — surfaced at next wait()
+            self._error = e
 
     def _write(self, step: int, host_tree: Any, extra: Dict) -> None:
         final = os.path.join(self.dir, f"step_{step:08d}")
@@ -63,27 +140,49 @@ class CheckpointManager:
         flat = _flatten(host_tree)
         manifest = {"step": step, "extra": extra, "leaves": {}}
         for key, arr in flat.items():
+            if self.fault_hook is not None:
+                self.fault_hook(step, key)
+            arr = np.asarray(arr)
             fname = _key_sanitize(key) + ".npy"
-            np.save(os.path.join(tmp, fname), arr)
+            with open(os.path.join(tmp, fname), "wb") as f:
+                np.save(f, arr)
+                f.flush()
+                os.fsync(f.fileno())
             manifest["leaves"][key] = {
-                "file": fname, "shape": list(arr.shape), "dtype": str(arr.dtype)}
+                "file": fname, "shape": list(arr.shape),
+                "dtype": str(arr.dtype), "crc32": _crc(arr)}
         with open(os.path.join(tmp, "manifest.json"), "w") as f:
             json.dump(manifest, f)
+            f.flush()
+            os.fsync(f.fileno())
+        _fsync_dir(tmp)
         if os.path.exists(final):
-            shutil.rmtree(final)
-        os.rename(tmp, final)
+            # swap, never delete-then-rename: a crash in between must leave
+            # either the old step (as .old, swept below) or the new one.
+            old = final + ".old"
+            shutil.rmtree(old, ignore_errors=True)
+            os.rename(final, old)
+            os.rename(tmp, final)
+            shutil.rmtree(old, ignore_errors=True)
+        else:
+            os.rename(tmp, final)
+        _fsync_dir(self.dir)
         self._gc()
 
     def wait(self) -> None:
+        """Join the async writer; re-raise any failure it captured."""
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise CheckpointWriteError(
+                f"async checkpoint write failed: {err}") from err
 
     def _gc(self) -> None:
         steps = self.all_steps()
         for s in steps[: -self.keep] if self.keep > 0 else []:
-            shutil.rmtree(os.path.join(self.dir, f"step_{s:08d}"),
-                          ignore_errors=True)
+            _rmtree_atomic(os.path.join(self.dir, f"step_{s:08d}"), ".trash")
 
     # -- load -----------------------------------------------------------------
     def all_steps(self) -> List[int]:
@@ -98,40 +197,97 @@ class CheckpointManager:
         steps = self.all_steps()
         return steps[-1] if steps else None
 
+    def load_extra(self, step: int) -> Dict[str, Any]:
+        """The ``extra`` payload saved with ``step`` (loop state, loss, ...)."""
+        path = os.path.join(self.dir, f"step_{step:08d}", "manifest.json")
+        try:
+            with open(path) as f:
+                return json.load(f).get("extra", {})
+        except (OSError, json.JSONDecodeError) as e:
+            raise CheckpointCorruptError(
+                f"unreadable manifest for step {step}: {e}") from e
+
     def restore(self, template: Any, step: Optional[int] = None,
                 shardings: Optional[Any] = None) -> Tuple[int, Any]:
-        """Restore into the structure of ``template``.
+        """Restore into the structure of ``template``, verifying checksums.
+
+        Without an explicit ``step``, candidates are tried newest -> oldest:
+        a torn or corrupt checkpoint is skipped with a warning and the
+        previous one restores instead (``CheckpointCorruptError`` only when
+        *no* intact checkpoint remains). An explicit ``step`` never falls
+        back. Template mismatches (``CheckpointMismatchError``) always raise
+        — a wrong template is a caller bug, not disk corruption.
 
         ``shardings``: optional matching pytree of NamedSharding — the elastic
         path: leaves are placed directly with the *new* mesh layout.
         """
-        if step is None:
-            step = self.latest_step()
-        if step is None:
+        candidates = [step] if step is not None else \
+            list(reversed(self.all_steps()))
+        if not candidates:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")
-        tree = load_checkpoint(os.path.join(self.dir, f"step_{step:08d}"),
-                               template)
-        if shardings is not None:
-            tree = jax.tree_util.tree_map(
-                lambda a, s: jax.device_put(a, s) if s is not None else
-                jax.device_put(a), tree, shardings)
-        return step, tree
+        last_err: Optional[Exception] = None
+        for s in candidates:
+            path = os.path.join(self.dir, f"step_{s:08d}")
+            try:
+                tree = load_checkpoint(path, template)
+            except (CheckpointCorruptError, OSError) as e:
+                if step is not None:
+                    raise
+                last_err = e
+                warnings.warn(f"checkpoint step {s} is torn/corrupt ({e}); "
+                              "falling back to the previous checkpoint")
+                continue
+            if shardings is not None:
+                tree = jax.tree_util.tree_map(
+                    lambda a, sh: jax.device_put(a, sh) if sh is not None else
+                    jax.device_put(a), tree, shardings)
+            return s, tree
+        raise CheckpointCorruptError(
+            f"no intact checkpoint under {self.dir}") from last_err
 
 
 def load_checkpoint(path: str, template: Any) -> Any:
-    with open(os.path.join(path, "manifest.json")) as f:
-        manifest = json.load(f)
+    """Load one checkpoint dir into ``template``'s structure, verifying each
+    leaf's CRC32/shape against the manifest and shape+dtype against the
+    template (typed ``CheckpointCorruptError`` / ``CheckpointMismatchError``
+    naming the offending leaf)."""
+    try:
+        with open(os.path.join(path, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError) as e:
+        raise CheckpointCorruptError(
+            f"{path}: unreadable manifest ({e})") from e
     leaves_meta = manifest["leaves"]
     paths = jax.tree_util.tree_leaves_with_path(template)
     vals = []
     for kpath, leaf in paths:
         key = jax.tree_util.keystr(kpath)
         if key not in leaves_meta:
-            raise KeyError(f"checkpoint missing leaf {key}")
-        arr = np.load(os.path.join(path, leaves_meta[key]["file"]))
+            raise CheckpointMismatchError(f"checkpoint missing leaf {key}")
+        meta = leaves_meta[key]
+        try:
+            arr = np.load(os.path.join(path, meta["file"]))
+        except Exception as e:  # torn file, truncated header, bad magic, ...
+            raise CheckpointCorruptError(
+                f"{path}: leaf {key} unreadable ({e})") from e
+        if tuple(arr.shape) != tuple(meta["shape"]) or \
+                str(arr.dtype) != meta["dtype"]:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {key} disagrees with its manifest entry "
+                f"({arr.shape}/{arr.dtype} vs "
+                f"{tuple(meta['shape'])}/{meta['dtype']})")
+        crc = meta.get("crc32")  # absent in pre-CRC checkpoints
+        if crc is not None and _crc(arr) != crc:
+            raise CheckpointCorruptError(
+                f"{path}: leaf {key} checksum mismatch")
         expect = tuple(getattr(leaf, "shape", arr.shape))
         if tuple(arr.shape) != expect:
-            raise ValueError(f"shape mismatch for {key}: {arr.shape} vs {expect}")
+            raise CheckpointMismatchError(
+                f"shape mismatch for {key}: {arr.shape} vs {expect}")
+        want_dtype = getattr(leaf, "dtype", None)
+        if want_dtype is not None and str(arr.dtype) != str(want_dtype):
+            raise CheckpointMismatchError(
+                f"dtype mismatch for {key}: {arr.dtype} vs {want_dtype}")
         vals.append(arr)
     treedef = jax.tree_util.tree_structure(template)
     return jax.tree_util.tree_unflatten(treedef, vals)

@@ -1,6 +1,8 @@
 from repro.distributed.chaos import (ChaosConfig, ChaosError, ChaosMonkey,
                                      ShardChaosConfig, ShardChaosMonkey,
-                                     ShardKilledError, TransientStepError)
+                                     ShardKilledError, TrainChaosConfig,
+                                     TrainChaosMonkey, TrainStepCrashError,
+                                     TransientStepError)
 from repro.distributed.dispatcher import Dispatcher
 from repro.distributed.fault_tolerance import (HealthMonitor,
                                                PreemptionHandler,
@@ -12,4 +14,5 @@ __all__ = ["PreemptionHandler", "StragglerMonitor", "RestartManifest",
            "HealthMonitor", "ShardState", "Dispatcher",
            "ChaosConfig", "ChaosError", "ChaosMonkey", "TransientStepError",
            "ShardChaosConfig", "ShardChaosMonkey", "ShardKilledError",
+           "TrainChaosConfig", "TrainChaosMonkey", "TrainStepCrashError",
            "pipelined_forward", "bubble_fraction"]

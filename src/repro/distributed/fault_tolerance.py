@@ -196,6 +196,12 @@ class RestartManifest:
     # to byte-identical greedy completions after a preemption. ``None`` for
     # training manifests.
     serve: Optional[Dict[str, Any]] = None
+    # Training loop state (``launch/train.py``'s ``loop_state``): data salt,
+    # loss EWMA, skip/rollback counters, RNG key — the same payload the
+    # checkpoint ``extra`` carries, mirrored here so a restart controller
+    # can inspect it without opening the checkpoint. ``None`` for serving
+    # manifests.
+    train: Optional[Dict[str, Any]] = None
 
     def save(self, path: str) -> None:
         """Atomically persist: write ``path + ".tmp"``, fsync, then

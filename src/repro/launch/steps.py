@@ -97,15 +97,52 @@ def _loss_and_grads(model, params, batch, nm: int):
     return loss * inv, grads
 
 
-def make_train_step(model, optimizer: Optimizer, plan: Plan, run: RunConfig):
-    """Standard GSPMD train step (paper-faithful baseline distribution)."""
+def make_train_step(model, optimizer: Optimizer, plan: Plan, run: RunConfig,
+                    *, guard: bool = False, grad_hook=None):
+    """Standard GSPMD train step (paper-faithful baseline distribution).
+
+    ``guard=True`` arms the on-device non-finite guard: the step still
+    computes gradients and the candidate update, but a non-finite loss or
+    gradient norm selects the *old* params/opt_state for every output leaf.
+    The select is ``jnp.where`` on the outputs, so buffer donation is
+    preserved and a clean step is bitwise-identical to the unguarded step
+    (a select with a true predicate is the identity). Guarded metrics are
+    ``{"loss", "grad_norm", "skipped"}``; the driver counts consecutive
+    ``skipped`` steps and aborts with ``TrainDivergedError`` — one bad batch
+    costs one skipped step, never a poisoned parameter tree.
+
+    ``grad_hook(loss, grads, arm) -> (loss, grads)`` is the chaos harness's
+    trace-time injection point (see
+    :func:`repro.distributed.chaos.nan_grad_hook`). When set, ``train_step``
+    takes a trailing traced ``arm`` operand — the ``logits_hook`` pattern
+    from ``make_generate_step`` — so one compiled program serves clean and
+    poisoned dispatches, and a disarmed dispatch passes through
+    bitwise-unchanged.
+    """
+    from repro.optim import global_norm  # noqa: PLC0415 (package re-export)
+
     nm = max(run.microbatches, 1)
 
-    def train_step(params, opt_state, batch):
+    def train_step(params, opt_state, batch, arm=None):
         with use_plan(plan):
             loss, grads = _loss_and_grads(model, params, batch, nm)
+            if grad_hook is not None:
+                loss, grads = grad_hook(loss, grads, arm)
+            if not guard:
+                new_params, new_opt = optimizer.update(grads, opt_state,
+                                                       params)
+                return new_params, new_opt, {"loss": loss}
+            gnorm = global_norm(grads)
+            ok = jnp.isfinite(loss) & jnp.isfinite(gnorm)
             new_params, new_opt = optimizer.update(grads, opt_state, params)
-        return new_params, new_opt, {"loss": loss}
+
+            def sel(new, old):
+                return jax.tree_util.tree_map(
+                    lambda n, o: jnp.where(ok, n, o), new, old)
+
+            metrics = {"loss": loss, "grad_norm": gnorm,
+                       "skipped": jnp.logical_not(ok)}
+        return sel(new_params, params), sel(new_opt, opt_state), metrics
 
     return train_step
 
